@@ -1,0 +1,80 @@
+"""Paper Figs 9 & 10: counting time vs dataset size, method comparison.
+
+Fig 9: MapConcat vs the serial-FSM reference vs the best redesigned engine,
+counting a batch of episodes over datasets 1-8 (time-scaled; relative
+curves match the paper).
+Fig 10: single-episode counting, serial FSM vs the redesigned algorithm.
+
+On this CPU container the "GPU" engines run as XLA:CPU programs; the
+quantity of interest is the *relative* scaling across dataset sizes and
+methods — the shape of the paper's curves — plus the absolute numbers on
+real TPU hardware via the same harness.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (count_batch, count_mapconcat, count_fsm_numpy,
+                        count_nonoverlapped, serial)
+from repro.core.episodes import episode_batch
+from repro.data.spikes import NetworkConfig, embedded_episodes, paper_dataset
+
+from .common import emit, time_fn
+
+SCALE = 0.01          # time-scale of the paper's datasets (CPU budget)
+DATASETS = (4, 5, 6, 7, 8)   # larger sets dominate runtime; keep the sweep
+
+
+def run() -> None:
+    cfg = NetworkConfig()
+    eps = embedded_episodes(cfg)
+    # 30-episode batch (paper counts 30 episodes): sub-episodes of embedded
+    cands = []
+    for e in eps:
+        for ln in (3, 4, 5):
+            for off in range(0, e.n - ln, 2):
+                cands.append(e.subepisode(off, off + ln))
+    # group by length for batching; use length 4 group (paper counts equal sets)
+    group = [e for e in cands if e.n == 4][:30]
+    sym, lo, hi = episode_batch(group)
+
+    for idx in DATASETS:
+        stream = paper_dataset(idx, scale=SCALE)
+        n = stream.n_events
+        cap = int(n)
+
+        # CPU serial FSM baseline (paper's CPU implementation)
+        import time as _t
+        t0 = _t.perf_counter()
+        for e in group[:3]:
+            count_fsm_numpy(stream.types, stream.times, e)
+        fsm_us = (_t.perf_counter() - t0) / 3 * len(group) * 1e6
+
+        # redesigned engine (dense) — 30-episode batch
+        us_dense = time_fn(
+            lambda: count_batch(stream.types, stream.times, sym, lo, hi,
+                                n_types=stream.n_types, cap=cap,
+                                engine="dense"))
+        # redesigned engine (paper-faithful CountScanWrite)
+        us_csw = time_fn(
+            lambda: count_batch(stream.types, stream.times, sym, lo, hi,
+                                n_types=stream.n_types, cap=cap,
+                                engine="count_scan_write",
+                                cap_occ=4 * cap, max_window=32))
+        # MapConcat baseline (single episode x30 scaled)
+        us_mc1 = time_fn(lambda: count_mapconcat(stream, group[0],
+                                                 n_segments=8, ring=16,
+                                                 occ_per_segment=max(64, n // 4)))
+        emit(f"fig9_ds{idx}_fsm_cpu_30ep", fsm_us, f"n_events={n}")
+        emit(f"fig9_ds{idx}_mapconcat_30ep", us_mc1 * len(group), f"n_events={n}")
+        emit(f"fig9_ds{idx}_redesigned_csw_30ep", us_csw, f"n_events={n}")
+        emit(f"fig9_ds{idx}_redesigned_dense_30ep", us_dense, f"n_events={n}")
+
+        # Fig 10: single episode
+        one_sym, one_lo, one_hi = episode_batch(group[:1])
+        us_one = time_fn(
+            lambda: count_batch(stream.types, stream.times, one_sym, one_lo,
+                                one_hi, n_types=stream.n_types, cap=cap,
+                                engine="dense"))
+        emit(f"fig10_ds{idx}_fsm_cpu_1ep", fsm_us / len(group), f"n_events={n}")
+        emit(f"fig10_ds{idx}_redesigned_1ep", us_one, f"n_events={n}")

@@ -1,0 +1,39 @@
+"""Beyond-paper table: multi-shard scaling of the distributed miner and the
+parallel overlap scheduler (paper runs subproblem-2 sequentially; our
+binary-lifting scheduler keeps the stitch log-depth at pod scale)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import count_nonoverlapped, serial, shard_stream
+from repro.core.distributed import make_count_sharded_jit
+from repro.data.spikes import NetworkConfig, embedded_episodes, paper_dataset
+
+from .common import emit, time_fn
+
+
+def run() -> None:
+    n_dev = len(jax.devices())
+    stream = paper_dataset(3, scale=0.02)
+    ep = embedded_episodes(NetworkConfig())[0].subepisode(0, 4)
+    n = stream.n_events
+
+    us1 = time_fn(lambda: count_nonoverlapped(stream, ep, engine="dense").count)
+    emit("dist_1shard_dense", us1, f"n_events={n}")
+
+    if n_dev >= 2:
+        shards = min(4, n_dev)
+        mesh = jax.make_mesh(
+            (shards, n_dev // shards), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        ty, tm = shard_stream(stream.types, stream.times, shards)
+        fn = make_count_sharded_jit(ep, mesh, n_types=stream.n_types, halo=512)
+        us = time_fn(lambda: fn(ty, tm))
+        emit(f"dist_{shards}shard_dense", us, f"n_events={n}")
+
+    # parallel vs sequential overlap scheduler on a large interval set
+    for par in (False, True):
+        us = time_fn(lambda: count_nonoverlapped(
+            stream, ep, engine="dense", parallel_schedule=par).count)
+        emit(f"dist_schedule_{'parallel' if par else 'scan'}", us, f"n_events={n}")

@@ -1,0 +1,39 @@
+"""Paper Fig 11: counting time vs episode length (compaction comparison).
+
+Methods: CountScanWrite (lock-free, backward), AtomicCompact analogue
+(forward + final sort), CudppCompact analogue (flag-scan), plus the
+beyond-paper dense engine. Episode length sweeps 2..9 on dataset 1
+(time-scaled), mirroring the paper's x-axis.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import count_batch
+from repro.core.episodes import episode_batch
+from repro.data.spikes import NetworkConfig, embedded_episodes, paper_dataset
+
+from .common import emit, time_fn
+
+ENGINES = ("count_scan_write", "atomic_sort", "flags", "dense")
+
+
+def run() -> None:
+    cfg = NetworkConfig()
+    stream = paper_dataset(1, scale=0.003)
+    n = stream.n_events
+    cap = int(n)
+    base = embedded_episodes(cfg)[0]
+
+    for length in (2, 3, 4, 5, 7, 9):
+        ep = base.subepisode(0, length)
+        sym, lo, hi = episode_batch([ep])
+        for engine in ENGINES:
+            kw = {}
+            if engine != "dense":
+                kw = dict(cap_occ=4 * cap, max_window=32)
+            us = time_fn(
+                lambda: count_batch(stream.types, stream.times, sym, lo, hi,
+                                    n_types=stream.n_types, cap=cap,
+                                    engine=engine, **kw))
+            emit(f"fig11_len{length}_{engine}", us, f"n_events={n}")

@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure. Emits
+``name,us_per_call,derived`` CSV lines (benchmarks/common.py)."""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: counting,episode_length,frequency,"
+                         "instruction_mix,distributed")
+    args = ap.parse_args()
+    from . import (bench_counting, bench_distributed, bench_episode_length,
+                   bench_frequency, bench_instruction_mix)
+    suites = {
+        "counting": bench_counting.run,            # paper Figs 9-10
+        "episode_length": bench_episode_length.run,  # paper Fig 11
+        "frequency": bench_frequency.run,          # paper Fig 12
+        "instruction_mix": bench_instruction_mix.run,  # paper Table III
+        "distributed": bench_distributed.run,      # beyond-paper scaling
+    }
+    chosen = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in chosen:
+        try:
+            suites[name]()
+        except Exception:
+            failed += 1
+            print(f"{name},-1,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

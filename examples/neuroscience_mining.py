@@ -1,0 +1,66 @@
+"""Paper end-to-end reproduction: simulate a 64-neuron MEA culture
+(inhomogeneous Poisson network, 4 embedded 9-node episodes — paper §V-A),
+then recover the embedded cascades by level-wise frequent episode mining.
+
+    PYTHONPATH=src python examples/neuroscience_mining.py [--duration 20]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import MinerConfig, mine
+from repro.data.spikes import (NetworkConfig, embedded_episodes,
+                               noise_pair_estimate, simulate)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--duration", type=float, default=20.0,
+                    help="simulated seconds (paper datasets: 20..4000)")
+    ap.add_argument("--max-level", type=int, default=5)
+    args = ap.parse_args()
+
+    net = NetworkConfig()
+    truth = embedded_episodes(net)
+    print(f"simulating {net.n_neurons} neurons for {args.duration}s "
+          f"({net.base_rate} Hz noise, {len(truth)} embedded 9-node episodes)")
+    stream = simulate(net, args.duration)
+    print(f"-> {stream.n_events} spikes")
+
+    # threshold: 1.4x the expected chance count of a noise pair, so level-2
+    # keeps cascade pairs (injection + noise) and drops coincidences
+    noise_est = noise_pair_estimate(net, args.duration)
+    # deeper levels: cascade counts decay ~conn_strength per level while the
+    # combinatorial noise floor collapses, so the threshold steps down
+    deep_thr = max(5, int(0.35 * net.trigger_hz * args.duration))
+    cfg = MinerConfig(
+        t_low=0.0, t_high=2 * net.delay_high,
+        threshold=deep_thr,
+        level_thresholds={2: int(1.4 * noise_est)},
+        max_level=args.max_level, engine="dense",
+        max_candidates=net.n_neurons ** 2)
+    t0 = time.time()
+    results = mine(stream, cfg)
+    dt = time.time() - t0
+
+    truth_prefixes = {ep.symbols[:lv] for ep in truth
+                      for lv in range(2, args.max_level + 1)}
+    print(f"mining to level {args.max_level} took {dt:.1f}s")
+    found_any = 0
+    for level in sorted(results):
+        lr = results[level]
+        if level == 1:
+            print(f"level 1: {len(lr.episodes)} active neurons")
+            continue
+        hits = [e for e in lr.episodes if e.symbols in truth_prefixes]
+        found_any += len(hits)
+        print(f"level {level}: {len(lr.episodes)} frequent / "
+              f"{lr.n_candidates} candidates; {len(hits)} are embedded-cascade "
+              f"prefixes, e.g. {hits[0] if hits else '-'}")
+    assert found_any > 0, "mining should recover embedded cascades"
+    print("OK: embedded cascades recovered from simulated spike trains")
+
+
+if __name__ == "__main__":
+    main()

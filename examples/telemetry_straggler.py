@@ -1,0 +1,43 @@
+"""The paper's technique on the framework's own control plane: mine the
+training runtime's telemetry event stream for chained-slowness episodes
+(the straggler signature). See DESIGN.md §4 and distributed/fault_tolerance.
+
+    PYTHONPATH=src python examples/telemetry_straggler.py
+"""
+import numpy as np
+
+from repro.distributed.fault_tolerance import StragglerMonitor
+
+
+def main():
+    rng = np.random.default_rng(3)
+    hosts = [f"host{i}" for i in range(16)]
+    mon = StragglerMonitor(window=30.0, repeat=3, min_count=2)
+
+    # Simulate 200 training steps: host7 degrades persistently after step 60
+    # (e.g. thermal throttling); host12 has two isolated blips (not a
+    # straggler — the non-overlapped episode count is burst-insensitive).
+    wall = 0.0
+    for step in range(200):
+        base = rng.normal(2.0, 0.05, len(hosts)).clip(1.8, None)
+        durs = dict(zip(hosts, base))
+        if step > 60:
+            durs["host7"] = float(base[7] * rng.uniform(1.8, 2.6))
+        if step in (30, 120):
+            durs["host12"] = float(base[12] * 3.0)
+        wall += max(durs.values())
+        mon.record_step(durs, wall)
+
+    scores = mon.scores()
+    print("straggler scores (non-overlapped chained-SLOW episode count):")
+    for h, c in sorted(scores.items(), key=lambda kv: -kv[1]):
+        print(f"  {h:8s} {c}")
+    flagged = mon.flagged()
+    print("flagged:", flagged)
+    assert "host7" in flagged, "persistent straggler must be flagged"
+    assert "host12" not in flagged, "isolated blips must not be flagged"
+    print("OK: persistent straggler isolated from benign blips")
+
+
+if __name__ == "__main__":
+    main()

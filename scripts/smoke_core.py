@@ -1,0 +1,62 @@
+"""Quick host-side validation of the core mining engine vs the numpy oracle."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    Episode, EventStream, serial, count_nonoverlapped, count_fsm_numpy,
+    count_fsm_scan, count_mapconcat, count_all_occurrences_numpy, greedy_numpy,
+    ENGINES,
+)
+
+
+def random_stream(rng, n=400, n_types=6, rate=1.0):
+    times = np.cumsum(rng.exponential(1.0 / rate, size=n)).astype(np.float32)
+    types = rng.integers(0, n_types, size=n).astype(np.int32)
+    return EventStream(types, times, n_types)
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n_fail = 0
+    for trial in range(30):
+        n_types = int(rng.integers(2, 6))
+        s = random_stream(rng, n=int(rng.integers(50, 400)), n_types=n_types,
+                          rate=float(rng.uniform(0.5, 3.0)))
+        n = int(rng.integers(1, 5))
+        ep = serial(rng.integers(0, n_types, size=n).tolist(),
+                    float(rng.uniform(0, 1)), float(rng.uniform(1.5, 6)))
+        want = count_fsm_numpy(s.types, s.times, ep)
+        # oracle #2: exact superset + greedy
+        st, en = count_all_occurrences_numpy(s.types, s.times, ep)
+        want2 = greedy_numpy(st, en)
+        if want != want2:
+            print(f"[{trial}] ORACLE DISAGREEMENT fsm={want} superset-greedy={want2} ep={ep}")
+            n_fail += 1
+            continue
+        for engine in ENGINES:
+            got = count_nonoverlapped(
+                s, ep, engine=engine, cap_occ=24 * s.n_events, max_window=128)
+            if int(got.count) != want or bool(got.overflow):
+                print(f"[{trial}] engine={engine} got={int(got.count)} want={want} "
+                      f"overflow={bool(got.overflow)} ep={ep}")
+                n_fail += 1
+        # parallel scheduler
+        got_p = count_nonoverlapped(s, ep, engine="dense", parallel_schedule=True)
+        if int(got_p.count) != want:
+            print(f"[{trial}] parallel-schedule got={int(got_p.count)} want={want}")
+            n_fail += 1
+        # scan FSM
+        got_fsm = count_fsm_scan(s.types, s.times, ep, ring=16)[0]
+        if int(got_fsm) != want:
+            print(f"[{trial}] fsm-scan got={int(got_fsm)} want={want} ep={ep}")
+            n_fail += 1
+        # mapconcat
+        got_mc = count_mapconcat(s, ep, n_segments=4, ring=48, occ_per_segment=max(64, s.n_events))
+        if int(got_mc) != want:
+            print(f"[{trial}] mapconcat got={int(got_mc)} want={want} ep={ep}")
+            n_fail += 1
+    print("FAILURES:", n_fail)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Validate shard_map sharded counting vs oracle (run with fake devices)."""
+import os, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from repro.core import serial, shard_stream, count_fsm_numpy
+from repro.core.distributed import make_count_sharded_jit
+
+rng = np.random.default_rng(1)
+fails = 0
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+for trial in range(4):
+    n = 480
+    n_types = 5
+    times = np.cumsum(rng.exponential(0.5, size=n)).astype(np.float32)
+    types = rng.integers(0, n_types, size=n).astype(np.int32)
+    nsym = int(rng.integers(2, 5))
+    ep = serial(rng.integers(0, n_types, size=nsym).tolist(), 0.1, 3.0)
+    want = count_fsm_numpy(types, times, ep)
+    ty_s, tm_s = shard_stream(types, times, 4)
+    t0 = time.time()
+    fn = make_count_sharded_jit(ep, mesh, n_types=n_types, halo=120)
+    got, short = fn(ty_s, tm_s)
+    ok = int(got) == want and not bool(short)
+    print(f"[{trial}] got={int(got)} want={want} short={bool(short)} {time.time()-t0:.1f}s")
+    if not ok:
+        fails += 1
+print("FAILURES:", fails)

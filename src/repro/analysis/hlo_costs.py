@@ -1,0 +1,384 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body exactly once
+(verified empirically — see EXPERIMENTS.md §Roofline-notes), which silently
+under-reports any scan-over-layers module by ~n_layers x. This walker
+parses the optimized HLO, resolves operand shapes through a per-computation
+symbol table, discovers each while's trip count from its condition
+computation (scan conditions compare the induction variable against a
+literal), and accumulates:
+
+  * flops        — 2 * prod(result_dims) * contraction_size for every dot,
+                   multiplied through nested while trip counts;
+  * hbm_bytes    — per *kernel* (fusion = one kernel: operands + results;
+                   fusion internals are free), a first-order HBM traffic
+                   model;
+  * coll_bytes   — operand bytes per collective kind (all-gather,
+                   all-reduce, reduce-scatter, all-to-all,
+                   collective-permute), trip-corrected;
+  * op_mix       — instruction counts per opcode, trip-corrected (the
+                   Table III "instructions executed" analogue).
+
+All numbers are per-device (the module is the GSPMD-partitioned one).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_OP_RE = re.compile(r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+            "after-all", "iota", "partition-id", "replica-id"}
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_types: list
+    operand_names: list
+    rest: str              # operand text + attributes (for dims / callees)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    by_name: Dict[str, Instr]
+
+    def _update_shapes(self, instr: Instr):
+        """Shapes of the 'update' operand (index 1) of a DUS/scatter."""
+        if len(instr.operand_names) >= 2:
+            src = self.by_name.get(instr.operand_names[1])
+            if src is not None:
+                return src.result_types
+        return []
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, dict] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and "{" in line and " = " not in line.split("{")[0]:
+                name = hdr.group(2)
+                cur = Computation(name, [], {})
+                self.computations[name] = cur
+                if hdr.group(1):
+                    self.entry = name
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            parsed = self._parse_instr(line)
+            if parsed is None:
+                continue
+            cur.instrs.append(parsed)
+            cur.by_name[parsed.name] = parsed
+
+    @staticmethod
+    def _parse_instr(line: str) -> Optional["Instr"]:
+        s = line.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        if not s.startswith("%"):
+            return None
+        eq = s.find(" = ")
+        if eq < 0:
+            return None
+        name = s[1:eq]
+        rest = s[eq + 3:]
+        # type: either a parenthesized tuple (may contain /*index=N*/
+        # comments) or a single dtype[shape]{layout} token
+        if rest.startswith("("):
+            depth, tend = 0, -1
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        tend = i + 1
+                        break
+            if tend < 0:
+                return None
+        else:
+            tend = rest.find(" ")
+            if tend < 0:
+                return None
+        type_str = rest[:tend]
+        after = rest[tend:].lstrip()
+        m = _OP_RE.match(after)
+        if not m:
+            return None
+        op = m.group(1)
+        tail = after[m.end():]
+        # operand region: up to the matching close paren at depth 0
+        depth, end = 1, len(tail)
+        for i, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERAND_RE.findall(tail[:end])
+        return Instr(name, op, _parse_shapes(type_str), operands, tail)
+
+    # ------------------------------------------------------------------
+    def _operand_shapes(self, comp: Computation, instr: Instr):
+        shapes = []
+        for on in instr.operand_names:
+            src = comp.by_name.get(on)
+            if src is not None:
+                shapes.extend(src.result_types)
+        return shapes
+
+    def _callee(self, instr: Instr, attr: str) -> Optional[str]:
+        m = re.search(attr + r"=%?([\w.\-]+)", instr.rest)
+        return m.group(1) if m else None
+
+    def _trip_count(self, instr: Instr, cond_name: Optional[str]) -> int:
+        # preferred: XLA records it on the while instruction
+        m = re.search(r'known_trip_count[^0-9]*"n"\s*:\s*"?(\d+)', instr.rest)
+        if m:
+            return max(1, int(m.group(1)))
+        comp = self.computations.get(cond_name or "")
+        if comp is None:
+            return 1
+        # fallback: the loop bound is the s32 constant feeding the (possibly
+        # fusion-wrapped) LT compare in the condition computation
+        consts = [int(mm.group(1)) for ins in comp.instrs if ins.op == "constant"
+                  for mm in [re.match(r"(-?\d+)", ins.rest)] if mm]
+        return max(consts) if consts else 1
+
+    def _dot_flops(self, comp: Computation, instr: Instr) -> float:
+        result_elems = 1
+        for _, dims in instr.result_types:
+            for d in dims:
+                result_elems *= d
+        # contraction size from lhs shape + lhs_contracting_dims
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+        lhs = comp.by_name.get(instr.operand_names[0]) if instr.operand_names else None
+        contract = 1
+        if m and lhs is not None and lhs.result_types:
+            dims = lhs.result_types[0][1]
+            for ax in m.group(1).split(","):
+                if ax:
+                    contract *= dims[int(ax)]
+        return 2.0 * result_elems * contract
+
+    def cost(self, comp_name: Optional[str] = None) -> dict:
+        comp_name = comp_name or self.entry
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.computations.get(comp_name)
+        zero = {"flops": 0.0, "hbm_bytes": 0.0, "coll": {}, "op_mix": {}}
+        if comp is None:
+            return zero
+        total = {"flops": 0.0, "hbm_bytes": 0.0, "coll": {}, "op_mix": {}}
+
+        def add(dst, src, mult=1.0):
+            dst["flops"] += src["flops"] * mult
+            dst["hbm_bytes"] += src["hbm_bytes"] * mult
+            for k, v in src["coll"].items():
+                dst["coll"][k] = dst["coll"].get(k, 0.0) + v * mult
+            for k, v in src["op_mix"].items():
+                dst["op_mix"][k] = dst["op_mix"].get(k, 0.0) + v * mult
+
+        self._memo[comp_name] = total  # break cycles defensively
+        for ins in comp.instrs:
+            mix_key = ins.op
+            if ins.op in FREE_OPS:
+                continue
+            total["op_mix"][mix_key] = total["op_mix"].get(mix_key, 0.0) + 1
+            if ins.op == "while":
+                body = self._callee(ins, "body")
+                cond = self._callee(ins, "condition")
+                trip = self._trip_count(ins, cond)
+                if body:
+                    add(total, self.cost(body), trip)
+                if cond:
+                    add(total, self.cost(cond), trip)
+                continue
+            if ins.op in ("fusion", "call", "async-start"):
+                callee = self._callee(ins, "calls") or self._callee(ins, "to_apply")
+                inner = self.cost(callee) if callee else zero
+                # fusion = one kernel: HBM = operands + results; inner dots count
+                total["flops"] += inner["flops"]
+                for k, v in inner["coll"].items():
+                    total["coll"][k] = total["coll"].get(k, 0.0) + v
+                op_shapes = self._operand_shapes(comp, ins)
+                ob = _shape_bytes(op_shapes)
+                rb = _shape_bytes(ins.result_types)
+                called = self.computations.get(callee or "")
+                if called is not None:
+                    kinds = {i.op for i in called.instrs}
+                    biggest = max((_shape_bytes([s]) for s in op_shapes),
+                                  default=0)
+                    if "dynamic-update-slice" in kinds:
+                        # in-place slice-update fusion: the aliased buffer is
+                        # not streamed; traffic ~ 2x the update regions
+                        upd = sum(
+                            _shape_bytes(called._update_shapes(i))
+                            for i in called.instrs
+                            if i.op == "dynamic-update-slice")
+                        alias = biggest if rb == biggest else 0
+                        total["hbm_bytes"] += (ob - biggest) + 2 * upd + (rb - alias)
+                        continue
+                    if kinds & {"dynamic-slice", "gather"}:
+                        # slice-read fusion: the big source is not fully read
+                        total["hbm_bytes"] += (ob - biggest) + 2 * rb
+                        continue
+                total["hbm_bytes"] += ob + rb
+                continue
+            if ins.op == "conditional":
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                      r"(?:true|false)_computation=%?([\w.\-]+))",
+                                      ins.rest)
+                names = []
+                for grp in branches:
+                    for g in grp:
+                        if g:
+                            names.extend(re.findall(r"%?([\w.\-]+)", g))
+                if names:
+                    costs = [self.cost(n) for n in names]
+                    best = max(costs, key=lambda c: c["flops"] + c["hbm_bytes"])
+                    add(total, best)
+                continue
+            if ins.op == "dot":
+                total["flops"] += self._dot_flops(comp, ins)
+            if ins.op in ("dynamic-update-slice", "scatter"):
+                # in-place slice update: traffic ~ 2x the update region, not
+                # the whole buffer (XLA aliases input/output)
+                upd = (self._operand_shapes(comp, ins) or [("f32", [0])])[1:]
+                total["hbm_bytes"] += 2 * _shape_bytes(upd)
+                continue
+            if ins.op in ("dynamic-slice", "gather"):
+                # reads only the slice region ~ result size
+                total["hbm_bytes"] += 2 * _shape_bytes(ins.result_types)
+                continue
+            ob = _shape_bytes(self._operand_shapes(comp, ins))
+            rb = _shape_bytes(ins.result_types)
+            total["hbm_bytes"] += ob + rb
+            for c in COLLECTIVES:
+                if ins.op == c or ins.op == c + "-start":
+                    total["coll"][c] = total["coll"].get(c, 0.0) + ob
+                    break
+        self._memo[comp_name] = total
+        return total
+
+
+def module_costs(hlo_text: str) -> dict:
+    """Entry-point: trip-corrected per-device costs of an optimized module."""
+    mod = HloModule(hlo_text)
+    c = mod.cost()
+    c["coll"]["total"] = float(sum(v for k, v in c["coll"].items()))
+    return c
+
+
+def top_contributors(hlo_text: str, n: int = 20, by: str = "hbm_bytes"):
+    """Top-n individual instructions by trip-multiplied bytes (or flops).
+    Diagnostic for the §Perf hypothesis loop."""
+    mod = HloModule(hlo_text)
+    items: list = []
+
+    def walk(comp_name: str, mult: float, depth: int):
+        comp = mod.computations.get(comp_name)
+        if comp is None or depth > 12:
+            return
+        for ins in comp.instrs:
+            if ins.op in FREE_OPS:
+                continue
+            if ins.op == "while":
+                body = mod._callee(ins, "body")
+                trip = mod._trip_count(ins, mod._callee(ins, "condition"))
+                if body:
+                    walk(body, mult * trip, depth + 1)
+                continue
+            if ins.op in ("fusion", "call"):
+                callee = mod._callee(ins, "calls") or mod._callee(ins, "to_apply")
+                inner = mod.cost(callee) if callee else {"flops": 0.0}
+                op_shapes = mod._operand_shapes(comp, ins)
+                ob = _shape_bytes(op_shapes)
+                rb = _shape_bytes(ins.result_types)
+                called = mod.computations.get(callee or "")
+                label = f"{comp_name}/{ins.name} fusion"
+                bytes_ = ob + rb
+                if called is not None:
+                    kinds = {i.op for i in called.instrs}
+                    biggest = max((_shape_bytes([s]) for s in op_shapes), default=0)
+                    if "dynamic-update-slice" in kinds:
+                        upd = sum(_shape_bytes(called._update_shapes(i))
+                                  for i in called.instrs
+                                  if i.op == "dynamic-update-slice")
+                        alias = biggest if rb == biggest else 0
+                        bytes_ = (ob - biggest) + 2 * upd + (rb - alias)
+                    elif kinds & {"dynamic-slice", "gather"}:
+                        bytes_ = (ob - biggest) + 2 * rb
+                items.append((bytes_ * mult, inner["flops"] * mult, label,
+                              ins.result_types[:1]))
+                continue
+            if ins.op in ("dynamic-update-slice", "scatter"):
+                b_ = 2 * _shape_bytes(comp._update_shapes(ins))
+            elif ins.op in ("dynamic-slice", "gather"):
+                b_ = 2 * _shape_bytes(ins.result_types)
+            else:
+                b_ = (_shape_bytes(mod._operand_shapes(comp, ins))
+                      + _shape_bytes(ins.result_types))
+            fl = mod._dot_flops(comp, ins) if ins.op == "dot" else 0.0
+            items.append((b_ * mult, fl * mult,
+                          f"{comp_name}/{ins.name} {ins.op}",
+                          ins.result_types[:1]))
+
+    walk(mod.entry, 1.0, 0)
+    key = 0 if by == "hbm_bytes" else 1
+    items.sort(key=lambda t: -t[key])
+    return items[:n]

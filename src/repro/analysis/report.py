@@ -1,0 +1,88 @@
+"""Render the dry-run JSON cells into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+from pathlib import Path
+
+
+def _fmt_t(x: float) -> str:
+    if x >= 1:
+        return f"{x:8.2f}"
+    return f"{x:8.4f}"
+
+
+def _load(out_dir: str):
+    rows = []
+    for p in sorted(glob.glob(f"{out_dir}/*/*.json")):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def roofline_table(out_dir: str = "experiments/dryrun",
+                   mesh: str = "16x16") -> str:
+    rows = [r for r in _load(out_dir) if r.get("mesh") == mesh]
+    lines = [
+        "| arch | shape | T_compute s | T_memory s | T_collective s | "
+        "bottleneck | HLO GFLOPs/dev | coll GB/dev | MODEL/HLO | roofline frac | "
+        "mem GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped (full attention @500k) | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | "
+                         f"{r.get('error','')[:60]} | | | | | |")
+            continue
+        f = r["roofline"]
+        mem = r["bytes_per_device_resident"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} |{_fmt_t(f['t_compute'])} |"
+            f"{_fmt_t(f['t_memory'])} |{_fmt_t(f['t_collective'])} | "
+            f"{f['bottleneck']} | {f['flops_per_device']/1e9:,.0f} | "
+            f"{f['coll_bytes_per_device']/1e9:.2f} | "
+            f"{f['useful_ratio']:.3f} | {f['peak_fraction']:.3f} | {mem:.1f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(out_dir: str = "experiments/dryrun") -> str:
+    rows = _load(out_dir)
+    lines = [
+        "| mesh | arch | shape | status | compile s | args GB/dev | temp GB/dev |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            lines.append(f"| {r['mesh']} | {r['arch']} | {r['shape']} | "
+                         f"{r['status']} | — | — | — |")
+            continue
+        ma = r["memory_analysis"]
+        lines.append(
+            f"| {r['mesh']} | {r['arch']} | {r['shape']} | ok | "
+            f"{r['compile_s']:.1f} | {ma['argument_size_in_bytes']/1e9:.2f} | "
+            f"{ma['temp_size_in_bytes']/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def summary(out_dir: str = "experiments/dryrun") -> str:
+    rows = _load(out_dir)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    n_err = len(rows) - n_ok - n_skip
+    return f"{len(rows)} cells: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors"
+
+
+if __name__ == "__main__":
+    out = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    print(summary(out))
+    print()
+    print("## 16x16")
+    print(roofline_table(out, "16x16"))
+    print()
+    print("## 2x16x16")
+    print(roofline_table(out, "2x16x16"))

@@ -1,0 +1,12 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained GLU experts.
+[hf:databricks/dbrx-base; unverified]"""
+from .base import ArchConfig, MoECfg
+
+CONFIG = ArchConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=10752, vocab=100352,
+    moe=MoECfg(n_experts=16, top_k=4),
+    block_pattern=("attn",),
+    source="hf:databricks/dbrx-base; unverified",
+)

@@ -1,0 +1,11 @@
+"""granite-3-2b [dense] — GQA, tied embeddings.
+[hf:ibm-granite/granite-3.0-2b-base; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-3-2b", family="dense",
+    n_layers=40, d_model=2048, n_heads=32, n_kv_heads=8, head_dim=64,
+    d_ff=8192, vocab=49155, tie_embeddings=True,
+    block_pattern=("attn",),
+    source="hf:ibm-granite/granite-3.0-2b-base; hf",
+)

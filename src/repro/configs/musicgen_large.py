@@ -1,0 +1,13 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens; the EnCodec
+tokenizer is the stub frontend (input_specs provides precomputed code ids).
+[arXiv:2306.05284; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, head_dim=64,
+    d_ff=8192, vocab=2048,
+    mlp="gelu", frontend="audio",
+    block_pattern=("attn",),
+    source="arXiv:2306.05284; hf",
+)

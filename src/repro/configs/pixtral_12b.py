@@ -1,0 +1,13 @@
+"""pixtral-12b [vlm] — mistral-nemo backbone; the pixtral ViT is the stub
+frontend (input_specs provides precomputed patch embeddings, 256 x 1024 per
+image, projected and prepended). [hf:mistralai/Pixtral-12B-2409; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=131072,
+    frontend="vision", n_patches=256, d_patch=1024,
+    block_pattern=("attn",),
+    source="hf:mistralai/Pixtral-12B-2409; unverified",
+)

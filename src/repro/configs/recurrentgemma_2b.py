@@ -1,0 +1,14 @@
+"""recurrentgemma-2b [hybrid] — Griffin: RG-LRU + local attention, pattern
+(rec, rec, local-attn); MQA (kv=1), window 2048. Sub-quadratic: runs
+long_500k. [arXiv:2402.19427; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab=256000,
+    block_pattern=("rec", "rec", "local"), window=2048,
+    rnn_width=2560, conv_width=4, tie_embeddings=True,
+    sub_quadratic=True,
+    source="arXiv:2402.19427; hf",
+)

@@ -1,0 +1,74 @@
+"""Assigned input-shape sets and ShapeDtypeStruct stand-ins for the dry-run.
+
+LM transformer shapes are seq_len x global_batch. ``decode_*``/``long_*``
+lower ``serve_step`` (one new token against a seq_len KV cache), NOT
+``train_step``; ``prefill_*`` lowers the forward pass. ``long_500k`` needs
+sub-quadratic attention and only applies to archs with
+``cfg.sub_quadratic`` (recurrentgemma-2b, rwkv6-3b) — the skip for pure
+full-attention archs is recorded in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ArchConfig, shape: ShapeSpec) -> bool:
+    if shape.name == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                batch_override: int = 0) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Modality frontends are stubs: pixtral gets precomputed patch embeddings
+    (n_patches x d_patch per image, one image per sequence, prepended);
+    musicgen gets precomputed EnCodec code ids (vocab 2048).
+    """
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "vision":
+            s_text = s - cfg.n_patches
+            specs = {
+                "tokens": sds((b, s_text), i32),
+                "patches": sds((b, cfg.n_patches, cfg.d_patch), f32),
+                "targets": sds((b, s_text), i32),
+            }
+            if shape.kind == "train":
+                specs["loss_mask"] = sds((b, s_text), f32)
+            else:
+                specs.pop("targets")
+            return specs
+        specs = {"tokens": sds((b, s), i32)}
+        if shape.kind == "train":
+            specs["targets"] = sds((b, s), i32)
+            specs["loss_mask"] = sds((b, s), f32)
+        return specs
+    # decode: one new token against a cache of seq_len
+    return {"tokens": sds((b,), i32), "pos": sds((b,), i32)}

@@ -1,0 +1,21 @@
+# The paper's primary contribution: non-overlapped counting of serial
+# episodes with inter-event constraints, transformed for accelerator
+# (TPU/XLA) execution. See DESIGN.md for the GPU->TPU mapping.
+from .episodes import Episode, serial, episode_batch
+from .events import EventStream, from_arrays, type_index, episode_symbol_times
+from .counting import CountResult, count_batch, count_nonoverlapped, count_occurrences, ENGINES
+from .mining import MinerConfig, LevelResult, mine, generate_candidates
+from .statemachine import count_fsm_numpy, count_fsm_scan, greedy_numpy, count_all_occurrences_numpy
+from .mapconcat import count_mapconcat
+from .distributed import count_sharded, shard_stream
+from . import compaction, scheduling, tracking, telemetry
+
+__all__ = [
+    "Episode", "serial", "episode_batch",
+    "EventStream", "from_arrays", "type_index", "episode_symbol_times",
+    "CountResult", "count_batch", "count_nonoverlapped", "count_occurrences", "ENGINES",
+    "MinerConfig", "LevelResult", "mine", "generate_candidates",
+    "count_fsm_numpy", "count_fsm_scan", "greedy_numpy", "count_all_occurrences_numpy",
+    "count_mapconcat", "count_sharded", "shard_stream",
+    "compaction", "scheduling", "tracking", "telemetry",
+]

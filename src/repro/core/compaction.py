@@ -1,0 +1,98 @@
+"""Output compaction for parallel local tracking (paper §IV-D/E).
+
+Each tracking "thread" m finds ``counts[m]`` next-events, located at
+contiguous window positions ``wlo[m] .. wlo[m]+counts[m]-1`` of the
+next-symbol time table. Compaction packs all found events into one
+contiguous occurrence list.
+
+GPU -> TPU mapping (see DESIGN.md §2):
+
+* ``count_scan_write`` — the paper's preferred lock-free method (Fig 8):
+  pass 1 counts (done by the caller via searchsorted bounds), pass 2 is an
+  exclusive prefix-scan of the counts (``jnp.cumsum``; XLA scan is a
+  first-class TPU op, the direct analogue of cudppScan), pass 3 writes each
+  thread's events at its scanned offset. Order-preserving, so backward
+  tracking yields end-time-sorted occurrences with no sort.
+
+* ``flags`` — the CudppCompact analogue (Fig 8's cudppCompact): every thread
+  owns a fixed slice of a large (cap_occ × max_window) slot array; valid
+  slots are flagged and the flag vector is scan-compacted. Materializes the
+  capacity-sized expanded array — the scattered-access cost the paper calls
+  out ("the array on which cudppCompact operates is very large").
+
+TPU has no global atomics, so AtomicCompact cannot be ported literally; its
+cost profile (no per-level ordering guarantee, one final sort) is reproduced
+by forward tracking + ``tracking.sort_by_end`` (see counting.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compact(
+    t_sym: jax.Array,      # f32[cap] next-symbol (or prev-symbol) time table
+    wlo: jax.Array,        # i32[cap_occ] window start per thread
+    counts: jax.Array,     # i32[cap_occ] events found per thread (<= max_window)
+    carried: jax.Array,    # f32[cap_occ] per-thread bookkeeping (start/end time)
+    *,
+    cap_occ: int,
+    max_window: int,
+    method: str = "count_scan_write",
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Compact per-thread windows into a contiguous list.
+
+    Returns (new_times f32[cap_occ], new_carried f32[cap_occ],
+             n_out i32, overflow bool).
+    """
+    if method == "count_scan_write":
+        return _count_scan_write(t_sym, wlo, counts, carried, cap_occ, max_window)
+    if method == "flags":
+        return _flags(t_sym, wlo, counts, carried, cap_occ, max_window)
+    raise ValueError(f"unknown compaction method: {method}")
+
+
+def _gather_windows(t_sym, wlo, counts, max_window):
+    cap = t_sym.shape[0]
+    w = jnp.arange(max_window, dtype=jnp.int32)
+    src = jnp.clip(wlo[:, None] + w[None, :], 0, cap - 1)
+    vals = t_sym[src]                                   # [cap_occ, W]
+    valid = w[None, :] < counts[:, None]                # [cap_occ, W]
+    return vals, valid
+
+
+def _count_scan_write(t_sym, wlo, counts, carried, cap_occ, max_window):
+    # pass 2: exclusive scan of counts -> per-thread output offset
+    offs = jnp.cumsum(counts) - counts                   # exclusive prefix sum
+    total = offs[-1] + counts[-1]
+    overflow = total > cap_occ
+    # pass 3: write
+    vals, valid = _gather_windows(t_sym, wlo, counts, max_window)
+    w = jnp.arange(max_window, dtype=jnp.int32)
+    pos = offs[:, None] + w[None, :]
+    pos = jnp.where(valid, pos, cap_occ)                 # park invalid off-array
+    new_t = jnp.full((cap_occ,), jnp.inf, t_sym.dtype)
+    new_c = jnp.full((cap_occ,), jnp.inf, carried.dtype)
+    new_t = new_t.at[pos.reshape(-1)].set(vals.reshape(-1), mode="drop")
+    carried_b = jnp.broadcast_to(carried[:, None], pos.shape)
+    new_c = new_c.at[pos.reshape(-1)].set(carried_b.reshape(-1), mode="drop")
+    return new_t, new_c, jnp.minimum(total, cap_occ).astype(jnp.int32), overflow
+
+
+def _flags(t_sym, wlo, counts, carried, cap_occ, max_window):
+    # expanded slot array: thread m owns slots [m*W, (m+1)*W)
+    vals, valid = _gather_windows(t_sym, wlo, counts, max_window)
+    flat_vals = vals.reshape(-1)
+    flat_carried = jnp.broadcast_to(carried[:, None], vals.shape).reshape(-1)
+    flags = valid.reshape(-1).astype(jnp.int32)
+    dest = jnp.cumsum(flags) - flags                     # exclusive scan over slots
+    total = jnp.sum(flags)
+    overflow = total > cap_occ
+    pos = jnp.where(flags > 0, dest, cap_occ)
+    new_t = jnp.full((cap_occ,), jnp.inf, t_sym.dtype)
+    new_c = jnp.full((cap_occ,), jnp.inf, carried.dtype)
+    new_t = new_t.at[pos].set(flat_vals, mode="drop")
+    new_c = new_c.at[pos].set(flat_carried, mode="drop")
+    return new_t, new_c, jnp.minimum(total, cap_occ).astype(jnp.int32), overflow

@@ -1,0 +1,143 @@
+"""Multi-pod sharded episode counting — the technique at 1000-node scale.
+
+The event stream is sharded over the mesh ``data`` axis (time-contiguous
+blocks). Inside ``shard_map``:
+
+  1. a *halo* of the first ``halo`` events of the right neighbor is fetched
+     with ``lax.ppermute`` (the lesson of the paper's MapConcat: boundary
+     occurrences need lookahead bounded by ``episode.max_span``);
+  2. each shard runs dense local tracking over (own + halo) events and keeps
+     only occurrence intervals that *start* at one of its own events
+     (strictly before the neighbor's first event time — the dominance
+     argument in tracking.py makes this exact, see DESIGN.md);
+  3. per-shard interval lists are ``all_gather``-ed, end-sorted, and resolved
+     with the greedy scheduler (sequential or parallel binary-lifting) —
+     subproblem 2 stays cheap exactly as the paper claims.
+
+Exactness holds when the halo spans ``episode.max_span`` in time (else the
+returned ``halo_short`` flag is set) and per-shard static caps hold.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from . import events as events_lib
+from . import scheduling, tracking
+from .episodes import Episode
+
+
+def shard_stream(types, times, n_shards: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side prep: pad and reshape a stream into [n_shards, n_local]."""
+    types = np.asarray(types, np.int32)
+    times = np.asarray(times, np.float32)
+    n = types.shape[0]
+    n_local = -(-n // n_shards)
+    pt = np.full((n_shards * n_local,), np.inf, np.float32)
+    py = np.full((n_shards * n_local,), -1, np.int32)
+    pt[:n] = times
+    py[:n] = types
+    return py.reshape(n_shards, n_local), pt.reshape(n_shards, n_local)
+
+
+def count_sharded(
+    types_sharded: jax.Array,   # i32[n_shards, n_local] (-1 padding)
+    times_sharded: jax.Array,   # f32[n_shards, n_local] (+inf padding)
+    episode: Episode,
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    n_types: int,
+    halo: int = 256,
+    parallel_schedule: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact non-overlapped count over a sharded stream.
+
+    Returns (count i32, halo_short bool). Works on any mesh whose ``axis``
+    size equals ``types_sharded.shape[0]``; all other mesh axes see
+    replicated data (so the same code runs single-pod and multi-pod).
+    """
+    sym, lo, hi = episode.as_arrays()
+    n_sym = episode.n
+    span = float(episode.max_span)
+    n_shards = types_sharded.shape[0]
+    n_local = types_sharded.shape[1]
+    cap_local = n_local + halo
+    axis_size = int(np.prod([mesh.shape[a] for a in [axis]]))
+    if axis_size != n_shards:
+        raise ValueError(f"stream sharded into {n_shards} != mesh axis {axis_size}")
+
+    other_axes = tuple(a for a in mesh.axis_names if a != axis)
+
+    def shard_fn(ty_blk, tm_blk):
+        ty = ty_blk[0]      # [n_local]
+        tm = tm_blk[0]
+        idx = lax.axis_index(axis)
+        n_sh = lax.axis_size(axis)
+
+        # halo exchange: my first `halo` events go to my LEFT neighbor, i.e.
+        # each shard receives the right neighbor's head block
+        perm = [(i, (i - 1) % n_shards) for i in range(n_shards)]
+        halo_ty = lax.ppermute(ty[:halo], axis, perm)
+        halo_tm = lax.ppermute(tm[:halo], axis, perm)
+        is_last = idx == n_sh - 1
+        halo_ty = jnp.where(is_last, -1, halo_ty)
+        halo_tm = jnp.where(is_last, jnp.inf, halo_tm)
+
+        all_ty = jnp.concatenate([ty, halo_ty])
+        all_tm = jnp.concatenate([tm, halo_tm])
+
+        # local tracking over own + halo events
+        table, counts = events_lib.type_index(all_ty, all_tm, n_types, cap_local)
+        times_by_sym = table[sym]
+        occ = tracking.track_dense(times_by_sym, lo, hi)
+
+        # keep only occurrences starting at my own events: start strictly
+        # before the neighbor's first event time (boundary ties belong to
+        # the right shard, whose own seeds satisfy start >= its first time)
+        t_boundary = jnp.where(jnp.isfinite(halo_tm[0]), halo_tm[0], jnp.inf)
+        mine = occ.valid & (occ.starts < t_boundary)
+        starts = jnp.where(mine, occ.starts, -jnp.inf)
+        ends = jnp.where(mine, occ.ends, jnp.inf)
+
+        # halo adequacy: the halo must span `span` past the boundary
+        # (or be exhausted because the stream ended)
+        halo_end = halo_tm[halo - 1]
+        halo_short = jnp.isfinite(halo_end) & (halo_end - t_boundary < span)
+
+        # gather all shards' intervals and resolve overlaps globally
+        g_starts = lax.all_gather(starts, axis).reshape(-1)
+        g_ends = lax.all_gather(ends, axis).reshape(-1)
+        order = jnp.argsort(g_ends)
+        occ_all = tracking.Occurrences(
+            starts=g_starts[order],
+            ends=g_ends[order],
+            valid=jnp.isfinite(g_ends[order]) & (g_starts[order] > -jnp.inf),
+            n_superset=jnp.sum(mine.astype(jnp.int32)),
+            overflow=jnp.any(counts > cap_local),
+        )
+        count = scheduling.greedy_count(occ_all, parallel=parallel_schedule)
+        halo_short = jnp.any(lax.all_gather(halo_short, axis))
+        return count[None], halo_short[None]
+
+    in_spec = P(axis, None)
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(in_spec, in_spec),
+        out_specs=(P(axis), P(axis)),
+    )
+    counts, short = fn(types_sharded, times_sharded)
+    del other_axes
+    return counts[0], short[0]
+
+
+def make_count_sharded_jit(episode: Episode, mesh: Mesh, **kw):
+    """jit-wrapped sharded counter for repeated use (benchmarks/serving)."""
+    fn = functools.partial(count_sharded, episode=episode, mesh=mesh, **kw)
+    return jax.jit(fn)

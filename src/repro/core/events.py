@@ -1,0 +1,114 @@
+"""Event streams (paper §II-C, Definition 1) and the per-type index.
+
+An event stream is a time-sorted sequence of (event_type, time) pairs. The
+paper's pre-processing step ("we first pre-process the entire event stream
+noting the positions of events of each event-type", §IV-A) becomes a padded
+dense [n_types, cap] table of per-type event times so that every downstream
+step is static-shaped and jit/vmap/shard_map friendly.
+
+Padding convention (used consistently across core/ and kernels/):
+  * padded *times* are ``+inf``  (so searchsorted keeps them at the tail),
+  * padded *values* (latest-start bookkeeping) are ``-inf``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF = jnp.inf
+
+
+@dataclasses.dataclass
+class EventStream:
+    """A finite, time-ordered event sequence.
+
+    Attributes:
+      types: int32[n]  event-type ids in ``[0, n_types)``.
+      times: float32[n] non-decreasing occurrence times.
+      n_types: size of the event-type alphabet (``|xi|``).
+    """
+
+    types: jax.Array
+    times: jax.Array
+    n_types: int
+
+    def __post_init__(self):
+        self.types = jnp.asarray(self.types, jnp.int32)
+        self.times = jnp.asarray(self.times, jnp.float32)
+        if self.types.ndim != 1 or self.times.ndim != 1:
+            raise ValueError("types/times must be rank-1")
+        if self.types.shape[0] != self.times.shape[0]:
+            raise ValueError("types/times length mismatch")
+
+    @property
+    def n_events(self) -> int:
+        return int(self.types.shape[0])
+
+    def validate(self) -> None:
+        """Host-side sanity checks (not jittable)."""
+        t = np.asarray(self.times)
+        if t.size and np.any(np.diff(t) < 0):
+            raise ValueError("event times must be non-decreasing")
+        ty = np.asarray(self.types)
+        if ty.size and (ty.min() < 0 or ty.max() >= self.n_types):
+            raise ValueError("event types out of range")
+
+
+def from_arrays(types, times, n_types: int) -> EventStream:
+    s = EventStream(types, times, n_types)
+    s.validate()
+    return s
+
+
+def type_index(
+    types: jax.Array, times: jax.Array, n_types: int, cap: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Group event times by type into a padded dense table (jit-compatible).
+
+    Args:
+      types: int32[n], times: float32[n] (time-sorted).
+      n_types: alphabet size. cap: static per-type capacity.
+
+    Returns:
+      times_by_type: float32[n_types, cap], each row the (sorted ascending)
+        times of that type, padded with +inf. Events beyond ``cap`` per type
+        are dropped (callers size ``cap`` from data; ``counts`` reports the
+        true totals so overflow is detectable).
+      counts: int32[n_types] true per-type event counts (pre-clip).
+    """
+    types = jnp.asarray(types, jnp.int32)
+    times = jnp.asarray(times, jnp.float32)
+    counts = jnp.zeros((n_types,), jnp.int32).at[types].add(1, mode="drop")
+    # Stable grouping: rank of each event within its own type.
+    onehot_free_rank = _rank_within_type(types, n_types)
+    table = jnp.full((n_types, cap), INF, jnp.float32)
+    table = table.at[types, onehot_free_rank].set(times, mode="drop")
+    return table, counts
+
+
+def _rank_within_type(types: jax.Array, n_types: int) -> jax.Array:
+    """rank[i] = #events j<i with types[j]==types[i]; O(n log n), no (n,T) blowup."""
+    n = types.shape[0]
+    order = jnp.argsort(types, stable=True)            # groups types together
+    sorted_types = types[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # start index of each run of equal type within the sorted order
+    starts = jnp.searchsorted(sorted_types, sorted_types, side="left").astype(jnp.int32)
+    rank_sorted = idx - starts
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    return rank
+
+
+def episode_symbol_times(
+    times_by_type: jax.Array, counts: jax.Array, symbols
+) -> Tuple[jax.Array, jax.Array]:
+    """Gather per-symbol padded time rows for one episode.
+
+    Returns (times_by_sym [N, cap], counts_by_sym [N]).
+    """
+    sym = jnp.asarray(symbols, jnp.int32)
+    return times_by_type[sym], counts[sym]

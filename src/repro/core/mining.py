@@ -1,0 +1,134 @@
+"""Level-wise (Apriori-style) frequent episode discovery (paper §II-C).
+
+At each level N, candidate N-node episodes are generated from frequent
+(N-1)-node episodes by the standard suffix/prefix join (alpha[1:] ==
+beta[:-1]); their non-overlapped counts are obtained in one batched
+(vmapped) pass over the stream — the counting step the paper accelerates —
+and candidates below the frequency threshold are pruned (anti-monotonicity
+of the non-overlapped count under sub-episodes guarantees completeness).
+
+The paper's focus is the *later* levels, where few-but-long episodes leave
+a one-thread-per-episode scheme under-utilized; here every level uses the
+data-parallel counting engines of counting.py, so parallelism is over
+(episodes x events) regardless of level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import counting
+from .episodes import Episode, episode_batch
+from .events import EventStream
+
+MAX_BATCH_PAD = 16  # pad candidate batches to multiples of this to limit recompiles
+
+
+@dataclasses.dataclass
+class MinerConfig:
+    t_low: float                 # shared inter-event window (low, high]
+    t_high: float
+    threshold: int               # minimum non-overlapped count
+    level_thresholds: Optional[Dict[int, int]] = None  # per-level override
+    max_level: int = 4
+    engine: str = "dense"
+    cap: Optional[int] = None    # per-type event capacity (default: n_events)
+    cap_occ: Optional[int] = None
+    max_window: int = 32
+    max_candidates: int = 4096   # safety valve per level
+
+
+@dataclasses.dataclass
+class LevelResult:
+    episodes: List[Episode]
+    counts: List[int]
+    n_candidates: int
+
+
+def _pad_to(n: int) -> int:
+    return max(MAX_BATCH_PAD, ((n + MAX_BATCH_PAD - 1) // MAX_BATCH_PAD) * MAX_BATCH_PAD)
+
+
+def generate_candidates(
+    frequent: Sequence[Episode], level: int, cfg: MinerConfig
+) -> List[Episode]:
+    """Suffix/prefix join of frequent (level-1)-node episodes."""
+    if level == 2:
+        types = sorted({e.symbols[0] for e in frequent})
+        return [
+            Episode((a, b), (cfg.t_low,), (cfg.t_high,))
+            for a in types
+            for b in types
+        ][: cfg.max_candidates]
+    by_prefix: Dict[Tuple[int, ...], List[Episode]] = {}
+    for e in frequent:
+        by_prefix.setdefault(e.symbols[:-1], []).append(e)
+    out: List[Episode] = []
+    for alpha in frequent:
+        for beta in by_prefix.get(alpha.symbols[1:], []):
+            out.append(
+                Episode(
+                    alpha.symbols + (beta.symbols[-1],),
+                    alpha.t_low + (cfg.t_low,),
+                    alpha.t_high + (cfg.t_high,),
+                )
+            )
+            if len(out) >= cfg.max_candidates:
+                return out
+    return out
+
+
+def count_candidates(
+    stream: EventStream, candidates: Sequence[Episode], cfg: MinerConfig
+) -> np.ndarray:
+    """Batched counting of equal-length candidates (padded for compile reuse)."""
+    if not candidates:
+        return np.zeros((0,), np.int32)
+    b = len(candidates)
+    bp = _pad_to(b)
+    padded = list(candidates) + [candidates[0]] * (bp - b)
+    sym, lo, hi = episode_batch(padded)
+    cap = cfg.cap or max(1, stream.n_events)
+    counts, _, overflow = counting.count_batch(
+        stream.types, stream.times, sym, lo, hi,
+        n_types=stream.n_types, cap=cap, engine=cfg.engine,
+        cap_occ=cfg.cap_occ, max_window=cfg.max_window)
+    counts = np.asarray(counts)[:b]
+    if bool(np.any(np.asarray(overflow)[:b])):
+        raise RuntimeError(
+            "episode counting overflowed static capacity; raise cap/cap_occ/max_window")
+    return counts
+
+
+def mine(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelResult]:
+    """Run level-wise mining up to cfg.max_level. Returns per-level results."""
+    results: Dict[int, LevelResult] = {}
+
+    # level 1: single-type episodes; count = per-type non-overlapped count
+    types = np.asarray(stream.types)
+    level1_eps, level1_counts = [], []
+    binc = np.bincount(types, minlength=stream.n_types)
+    for t in range(stream.n_types):
+        if binc[t] >= cfg.threshold:
+            level1_eps.append(Episode((t,)))
+            level1_counts.append(int(binc[t]))
+    results[1] = LevelResult(level1_eps, level1_counts, stream.n_types)
+
+    frequent = level1_eps
+    for level in range(2, cfg.max_level + 1):
+        if not frequent:
+            break
+        cands = generate_candidates(frequent, level, cfg)
+        if not cands:
+            results[level] = LevelResult([], [], 0)
+            break
+        counts = count_candidates(stream, cands, cfg)
+        thr = (cfg.level_thresholds or {}).get(level, cfg.threshold)
+        keep = [(e, int(c)) for e, c in zip(cands, counts) if c >= thr]
+        results[level] = LevelResult(
+            [e for e, _ in keep], [c for _, c in keep], len(cands))
+        frequent = [e for e, _ in keep]
+    return results

@@ -1,0 +1,93 @@
+"""Runtime telemetry mining — the paper's engine on the framework's own
+control plane (DESIGN.md §4 point 3).
+
+The distributed runtime emits a typed event stream: per-host slow steps,
+collective retries, checkpoint events. Recurring temporal patterns are
+exactly the paper's constrained serial episodes, e.g. the straggler
+signature ``SLOW(h) -(0, w]-> SLOW(h) -(0, w]-> SLOW(h)``: host h is slow on
+three step-adjacent occasions. Mining these with the non-overlapped counter
+gives a robust (burst-insensitive) straggler score.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from . import counting
+from .episodes import Episode, serial
+from .events import EventStream
+
+
+@dataclasses.dataclass
+class TelemetryLog:
+    """Host-side accumulating event log with a string event vocabulary."""
+
+    vocab: Dict[str, int] = dataclasses.field(default_factory=dict)
+    kinds: List[int] = dataclasses.field(default_factory=list)
+    times: List[float] = dataclasses.field(default_factory=list)
+
+    def key(self, kind: str) -> int:
+        if kind not in self.vocab:
+            self.vocab[kind] = len(self.vocab)
+        return self.vocab[kind]
+
+    def emit(self, kind: str, t: float) -> None:
+        self.kinds.append(self.key(kind))
+        self.times.append(float(t))
+
+    def to_stream(self) -> EventStream:
+        order = np.argsort(np.asarray(self.times, np.float64), kind="stable")
+        kinds = np.asarray(self.kinds, np.int32)[order]
+        times = np.asarray(self.times, np.float32)[order]
+        return EventStream(kinds, times, n_types=max(1, len(self.vocab)))
+
+
+def slow_step_events(
+    log: TelemetryLog, step_times: Dict[int, Sequence[float]], wall: Sequence[float],
+    slow_factor: float = 1.5,
+) -> None:
+    """Convert per-host step durations into SLOW(h) events.
+
+    step_times: host -> per-step duration; wall: per-step wall-clock stamps.
+    A host is 'slow' on a step when its duration exceeds slow_factor x the
+    median across hosts for that step.
+    """
+    hosts = sorted(step_times)
+    mat = np.asarray([step_times[h] for h in hosts], np.float64)  # [H, S]
+    med = np.median(mat, axis=0)
+    for hi_, h in enumerate(hosts):
+        for s, (d, m, w) in enumerate(zip(mat[hi_], med, wall)):
+            if m > 0 and d > slow_factor * m:
+                log.emit(f"SLOW:{h}", w)
+
+
+def straggler_scores(
+    log: TelemetryLog,
+    *,
+    window: float,
+    repeat: int = 3,
+    engine: str = "dense",
+) -> Dict[str, int]:
+    """Non-overlapped count of the repeat-SLOW episode per host.
+
+    A high score means host h keeps being slow in temporally-chained bursts
+    — the persistent-straggler signature — as opposed to isolated blips.
+    """
+    stream = log.to_stream()
+    scores: Dict[str, int] = {}
+    for kind, tid in log.vocab.items():
+        if not kind.startswith("SLOW:"):
+            continue
+        ep = serial([tid] * repeat, 0.0, window)
+        res = counting.count_nonoverlapped(stream, ep, engine=engine)
+        scores[kind.split(":", 1)[1]] = int(res.count)
+    return scores
+
+
+def flag_stragglers(
+    log: TelemetryLog, *, window: float, repeat: int = 3, min_count: int = 2
+) -> List[str]:
+    return [h for h, c in straggler_scores(log, window=window, repeat=repeat).items()
+            if c >= min_count]

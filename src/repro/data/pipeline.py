@@ -1,0 +1,97 @@
+"""Token data pipeline: synthetic corpora, packing, shard-aware batching."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+
+
+@dataclasses.dataclass
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    vocab: int
+    seed: int = 0
+    kind: str = "markov"      # markov | uniform | repeat
+
+
+class SyntheticCorpus:
+    """Deterministic synthetic token streams with learnable structure.
+
+    ``markov`` draws from a sparse random bigram chain (low entropy, so a
+    ~100M model visibly reduces loss within a few hundred steps — used by
+    examples/train_lm.py); ``repeat`` emits noisy repeated motifs (the LM
+    analogue of the paper's embedded episodes).
+    """
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab
+        if cfg.kind == "markov":
+            fanout = 2
+            self.next_tokens = rng.integers(0, v, size=(v, fanout))
+        elif cfg.kind == "repeat":
+            self.motifs = [rng.integers(0, v, size=rng.integers(4, 12))
+                           for _ in range(32)]
+        self.rng = rng
+
+    def _sequence(self, rng, n: int) -> np.ndarray:
+        cfg = self.cfg
+        if cfg.kind == "uniform":
+            return rng.integers(0, cfg.vocab, n)
+        if cfg.kind == "markov":
+            out = np.empty(n, np.int64)
+            t = rng.integers(0, cfg.vocab)
+            for i in range(n):
+                out[i] = t
+                t = self.next_tokens[t, rng.integers(0, self.next_tokens.shape[1])]
+            return out
+        # repeat: motifs separated by noise
+        out = []
+        while len(out) < n:
+            m = self.motifs[rng.integers(0, len(self.motifs))]
+            out.extend(m.tolist())
+            out.extend(rng.integers(0, cfg.vocab, rng.integers(1, 6)).tolist())
+        return np.asarray(out[:n])
+
+    def batches(self, *, frontend: Optional[str] = None,
+                arch: Optional[ArchConfig] = None) -> Iterator[Dict[str, jax.Array]]:
+        cfg = self.cfg
+        step = 0
+        while True:
+            rng = np.random.default_rng((cfg.seed, step))
+            b, s = cfg.global_batch, cfg.seq_len
+            if frontend == "vision" and arch is not None:
+                s_text = s - arch.n_patches
+                toks = np.stack([self._sequence(rng, s_text + 1) for _ in range(b)])
+                batch = {
+                    "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                    "targets": jnp.asarray(toks[:, 1:], jnp.int32),
+                    "patches": jnp.asarray(
+                        rng.normal(size=(b, arch.n_patches, arch.d_patch)),
+                        jnp.float32),
+                }
+            else:
+                toks = np.stack([self._sequence(rng, s + 1) for _ in range(b)])
+                batch = {
+                    "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                    "targets": jnp.asarray(toks[:, 1:], jnp.int32),
+                }
+            yield batch
+            step += 1
+
+
+def token_event_stream(tokens: np.ndarray, n_types: int):
+    """View a token sequence as the paper's event stream: event type =
+    token id (mod n_types), time = position. Lets the miner run over LM
+    data (e.g. MusicGen EnCodec codes)."""
+    from ..core.events import EventStream
+    tokens = np.asarray(tokens).reshape(-1)
+    return EventStream((tokens % n_types).astype(np.int32),
+                       np.arange(tokens.size, dtype=np.float32), n_types)

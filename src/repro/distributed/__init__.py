@@ -1,0 +1,8 @@
+from .sharding import MeshRules, DEFAULT_RULES, ACTIVATION_AXES, replicated
+from .checkpoint import Checkpointer
+from .fault_tolerance import StragglerMonitor, elastic_remesh, resilient_train_loop
+from .pipeline import pipeline_forward
+
+__all__ = ["MeshRules", "DEFAULT_RULES", "ACTIVATION_AXES", "replicated",
+           "Checkpointer", "StragglerMonitor", "elastic_remesh",
+           "resilient_train_loop", "pipeline_forward"]

@@ -1,0 +1,123 @@
+"""Fault tolerance & elastic scaling for the multi-pod runtime.
+
+Components:
+
+* ``RunState`` + ``resilient_train_loop`` — checkpoint/restart training:
+  periodic async checkpoints, crash recovery from the latest step, step
+  timing telemetry feeding the paper's episode miner.
+
+* ``StragglerMonitor`` — per-host step-duration telemetry -> SLOW(h) event
+  stream -> non-overlapped count of the chained-slowness episode
+  (core/telemetry.py). Hosts whose score crosses the threshold are
+  reported for mitigation (demotion/eviction at the scheduler level). This
+  is the paper's technique running on the framework's own control plane.
+
+* ``elastic_remesh`` — rebuild a (possibly smaller) mesh from currently
+  healthy devices and restore the latest checkpoint onto it. Checkpoints
+  are saved unsharded per leaf (distributed/checkpoint.py), so any mesh
+  whose axes divide the layer dimensions can resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..core import telemetry as tele
+from .checkpoint import Checkpointer
+from .sharding import MeshRules
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    window: float = 30.0        # seconds within which repeats chain
+    repeat: int = 3             # SLOW events chained to flag
+    slow_factor: float = 1.5
+    min_count: int = 2
+    log: tele.TelemetryLog = dataclasses.field(default_factory=tele.TelemetryLog)
+    _step_times: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
+    _wall: List[float] = dataclasses.field(default_factory=list)
+
+    def record_step(self, host_durations: Dict[str, float], wall: float) -> None:
+        self._wall.append(wall)
+        durs = list(host_durations.values())
+        med = float(np.median(durs)) if durs else 0.0
+        for h, d in host_durations.items():
+            self._step_times.setdefault(h, []).append(d)
+            if med > 0 and d > self.slow_factor * med:
+                self.log.emit(f"SLOW:{h}", wall)
+
+    def scores(self) -> Dict[str, int]:
+        if not self.log.kinds:
+            return {}
+        return tele.straggler_scores(
+            self.log, window=self.window, repeat=self.repeat)
+
+    def flagged(self) -> List[str]:
+        return [h for h, c in self.scores().items() if c >= self.min_count]
+
+
+def elastic_remesh(target_shape, axis_names, *, rules_cls=MeshRules):
+    """Build a mesh over the currently-available devices. If fewer devices
+    than requested survive, shrink the leading (data) axis."""
+    devs = jax.devices()
+    want = int(np.prod(target_shape))
+    shape = list(target_shape)
+    while int(np.prod(shape)) > len(devs) and shape[0] > 1:
+        shape[0] //= 2
+    n = int(np.prod(shape))
+    mesh = jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(shape), axis_names)
+    return mesh, rules_cls(mesh)
+
+
+def resilient_train_loop(
+    *,
+    step_fn: Callable,                      # (state..., batch) -> state..., metrics
+    init_state: Any,
+    batch_iter,
+    checkpointer: Checkpointer,
+    n_steps: int,
+    ckpt_every: int = 50,
+    monitor: Optional[StragglerMonitor] = None,
+    host_name: str = "host0",
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+    resume: bool = True,
+    fail_injector: Optional[Callable[[int], None]] = None,
+):
+    """Run ``step_fn`` with periodic async checkpoints and crash recovery.
+
+    Returns (final_state, start_step_after_any_resume, metrics_history).
+    ``fail_injector(step)`` may raise to simulate failures (tests); the
+    loop checkpoints, the caller restarts, and ``resume=True`` continues
+    from the latest published step.
+    """
+    start = 0
+    state = init_state
+    if resume and checkpointer.latest_step() is not None:
+        start = checkpointer.latest_step()
+        state = checkpointer.restore(init_state)
+    history = []
+    try:
+        for step in range(start, n_steps):
+            t0 = time.time()
+            if fail_injector is not None:
+                fail_injector(step)
+            batch = next(batch_iter)
+            state, metrics = step_fn(state, batch)
+            dt = time.time() - t0
+            if monitor is not None:
+                monitor.record_step({host_name: dt}, time.time())
+            history.append({k: float(v) for k, v in metrics.items()})
+            if on_metrics:
+                on_metrics(step, history[-1])
+            if (step + 1) % ckpt_every == 0 or step + 1 == n_steps:
+                checkpointer.save(step + 1, state)
+    finally:
+        # flush any in-flight async save even on crash, so the restart
+        # resumes from the newest published step
+        checkpointer.wait()
+    return state, start, history

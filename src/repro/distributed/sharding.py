@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP + pod axis).
+
+Every weight/cache leaf declares logical axis names (the *_specs() twins in
+models/); this module resolves them against a concrete mesh with
+divisibility checks — e.g. recurrentgemma's 10 attention heads do not divide
+model=16, so its q_proj falls back to replication while its ffn (7680 % 16
+== 0) stays tensor-parallel. That makes every (arch x shape x mesh) cell
+well-defined without per-arch hand tuning, which is what you need when a
+1000-node job has to restart on a differently-shaped healthy subset.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, None]
+
+# weight/cache logical axes -> mesh axes (tuples = try in order, first fit)
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),       # combined DP over pods
+    "vocab": "model",
+    "embed": None,                  # weight d_model dim replicated
+    "ff": "model",                  # Megatron column/row TP
+    "q_proj": "model",
+    "kv_proj": "model",
+    "experts": "model",             # EP
+    "heads": "model",
+    "kv_heads": "model",
+    "cache_seq": "model",           # SP over the KV cache (flash-decoding split)
+    "seq": None,
+    "layers": None,                 # scan axis
+    "ff_inner": None,               # expert-hidden dim (model axis is on E)
+}
+
+# activation name -> logical axes per dim
+ACTIVATION_AXES: Dict[str, Tuple[Logical, ...]] = {
+    "hidden": ("batch", "seq", "embed"),
+    "logits": ("batch", None, "vocab"),
+    "decode_hidden": ("batch", "seq", "embed"),
+    "tokens": ("batch", "seq"),
+    "tokens_1d": ("batch",),
+    "patches": ("batch", "seq", None),
+    "attn_heads": ("batch", None, "heads", None),
+    "moe_buffer": ("experts", "batch", None),
+    "moe_hidden": ("experts", "batch", "ff_inner"),
+}
+
+
+@dataclasses.dataclass
+class MeshRules:
+    mesh: Mesh
+    rules: Dict[str, Any] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+
+    # ------------------------- spec resolution -----------------------------
+
+    def _mesh_axes_for(self, logical: Logical, dim: int,
+                       used: set) -> Optional[Tuple[str, ...]]:
+        if logical is None:
+            return None
+        rule = self.rules.get(logical)
+        if rule is None:
+            return None
+        candidates = rule if isinstance(rule, tuple) else (rule,)
+        picked = []
+        size = 1
+        for ax in candidates:
+            if ax not in self.mesh.axis_names or ax in used:
+                continue
+            if dim % (size * self.mesh.shape[ax]) == 0:
+                picked.append(ax)
+                size *= self.mesh.shape[ax]
+        return tuple(picked) or None
+
+    def spec_for(self, logical_axes: Sequence[Logical],
+                 shape: Sequence[int]) -> P:
+        if len(logical_axes) != len(shape):
+            # trailing unnamed dims replicate
+            logical_axes = tuple(logical_axes) + (None,) * (len(shape) - len(logical_axes))
+        used: set = set()
+        parts = []
+        for logical, dim in zip(logical_axes, shape):
+            axes = self._mesh_axes_for(logical, int(dim), used)
+            if axes is None:
+                parts.append(None)
+            else:
+                used.update(axes)
+                parts.append(axes if len(axes) > 1 else axes[0])
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding_for(self, logical_axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, shape))
+
+    def zero_spec(self, spec: P, shape) -> P:
+        """ZeRO-style augmentation: additionally shard the first divisible
+        unsharded dim over the data axis (master params / optimizer state;
+        GSPMD inserts the per-use all-gathers)."""
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        used = {a for p in parts if p
+                for a in (p if isinstance(p, tuple) else (p,))}
+        if "data" in used or "data" not in self.mesh.axis_names:
+            return P(*parts)
+        n = self.mesh.shape["data"]
+        for i, (p, dim) in enumerate(zip(parts, shape)):
+            if p is None and int(dim) % n == 0 and int(dim) >= n:
+                parts[i] = "data"
+                break
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def tree_shardings_zero(self, spec_tree, shape_tree):
+        base = self.tree_shardings(spec_tree, shape_tree)
+        shapes = jax.tree.leaves(shape_tree)
+        flat, treedef = jax.tree.flatten(base)
+        out = [NamedSharding(self.mesh, self.zero_spec(ns.spec, sh.shape))
+               for ns, sh in zip(flat, shapes)]
+        return jax.tree.unflatten(treedef, out)
+
+    # --------------------------- tree helpers ------------------------------
+
+    def tree_shardings(self, spec_tree, shape_tree):
+        """Zip a logical-spec tree against abstract shapes -> NamedShardings."""
+        is_spec = lambda v: isinstance(v, tuple)
+        flat_specs, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+        flat_shapes = jax.tree.leaves(shape_tree)
+        if len(flat_specs) != len(flat_shapes):
+            raise ValueError(
+                f"spec tree ({len(flat_specs)}) != shape tree ({len(flat_shapes)})")
+        out = [
+            self.sharding_for(sp, sh.shape)
+            for sp, sh in zip(flat_specs, flat_shapes)
+        ]
+        return jax.tree.unflatten(treedef, out)
+
+    # ------------------------ activation constraints -----------------------
+
+    def constrain(self, x: jax.Array, name: str) -> jax.Array:
+        axes = ACTIVATION_AXES.get(name)
+        if axes is None:
+            return x
+        spec = self.spec_for(axes, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def batch_shardings(self, batch_specs: Dict[str, jax.ShapeDtypeStruct]):
+        """Input shardings for a train/serve batch dict."""
+        out = {}
+        for k, sds in batch_specs.items():
+            if k in ("tokens", "targets", "loss_mask"):
+                name = "tokens" if len(sds.shape) == 2 else "tokens_1d"
+            elif k == "patches":
+                name = "patches"
+            elif k == "pos":
+                name = "tokens_1d"
+            else:
+                name = "tokens"
+            out[k] = self.sharding_for(ACTIVATION_AXES[name], sds.shape)
+        return out
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots (+ ops.py wrappers,
+ref.py oracles): episode_track (the paper's parallel local tracking),
+flash_attention, wkv_chunk. All validated in interpret mode on CPU;
+BlockSpec tiling targets TPU VMEM."""
+from . import episode_track, flash_attention, ops, ref, wkv_chunk
+
+__all__ = ["episode_track", "flash_attention", "ops", "ref", "wkv_chunk"]

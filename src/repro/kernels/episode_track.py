@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for one level of parallel local tracking.
+
+This is the compute hot-spot the paper optimizes (Algorithm 2): for every
+event ``t`` of the next episode symbol, combine (max-reduce) the
+latest-start values of all previous-symbol events ``s`` inside the
+inter-event window ``t - hi <= s < t - lo``.
+
+TPU adaptation (DESIGN.md §2): instead of one divergent scanning thread per
+event (the CUDA formulation), the time axis is tiled into VMEM blocks. The
+grid is ``(next_tiles, window_tiles)``; for next-tile ``i`` the inner
+dimension walks the ``window_tiles`` previous-symbol tiles that can overlap
+its constraint window, starting at a *scalar-prefetched* tile offset
+(computed with searchsorted in ops.py — the paper's per-type index made
+block-level). Inside the kernel a (BN, BP) broadcast compare + row max
+replaces the divergent scan; max-accumulation is idempotent so clamped /
+duplicated boundary tiles are harmless.
+
+VMEM per grid step: BN + 2*BP + BN*BP fp32 ≈ 0.27 MB at BN=BP=256 — far
+under the ~16 MB/core budget, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -jnp.inf
+
+
+def _track_level_kernel(
+    # scalar-prefetch operands
+    start_tile_ref,     # i32[next_tiles] first prev-tile per next-tile
+    window_ref,         # f32[2] = (t_low, t_high)
+    # array operands
+    t_next_ref,         # f32[BN]   block of next-symbol times
+    t_prev_ref,         # f32[BP]   block of prev-symbol times
+    v_prev_ref,         # f32[BP]   block of prev-symbol latest-start values
+    # outputs
+    v_next_ref,         # f32[BN]   accumulated latest-start values
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        v_next_ref[...] = jnp.full_like(v_next_ref, NEG)
+
+    t_lo = window_ref[0]
+    t_hi = window_ref[1]
+    t_next = t_next_ref[...]                       # [BN]
+    t_prev = t_prev_ref[...]                       # [BP]
+    v_prev = v_prev_ref[...]                       # [BP]
+
+    # window: t - hi <= s < t - lo   (paper: lo < t - s <= hi)
+    ok = (t_prev[None, :] >= t_next[:, None] - t_hi) & (
+        t_prev[None, :] < t_next[:, None] - t_lo)          # [BN, BP]
+    contrib = jnp.max(jnp.where(ok, v_prev[None, :], NEG), axis=1)
+    v_next_ref[...] = jnp.maximum(v_next_ref[...], contrib)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_next", "block_prev", "window_tiles", "interpret"),
+)
+def track_level_pallas(
+    t_prev: jax.Array,      # f32[cap] sorted, +inf padded
+    v_prev: jax.Array,      # f32[cap] latest-start values (-inf pad)
+    t_next: jax.Array,      # f32[cap] sorted, +inf padded
+    t_low,
+    t_high,
+    *,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,   # 0 => cover all prev tiles (always exact)
+    interpret: bool = False,
+) -> jax.Array:
+    """One tracking level. Exact iff the constraint window of every next
+    block fits in ``window_tiles`` prev blocks (0 = all blocks, always
+    exact; ops.py computes a tight bound)."""
+    cap = t_prev.shape[0]
+    if t_next.shape[0] != cap or v_prev.shape[0] != cap:
+        raise ValueError("equal-capacity level arrays required")
+    bn = min(block_next, cap)
+    bp = min(block_prev, cap)
+    if cap % bn or cap % bp:
+        raise ValueError(f"cap={cap} must be a multiple of block sizes {bn},{bp}")
+    next_tiles = cap // bn
+    prev_tiles = cap // bp
+    wt = prev_tiles if window_tiles == 0 else min(window_tiles, prev_tiles)
+
+    # first prev tile whose block may intersect the earliest window of the
+    # next tile:   first s >= min_t(t_next tile) - t_high
+    tile_min = t_next.reshape(next_tiles, bn)[:, 0]
+    start_idx = jnp.searchsorted(t_prev, tile_min - jnp.float32(t_high), side="left")
+    start_tile = jnp.clip(
+        (start_idx // bp).astype(jnp.int32), 0, jnp.int32(max(prev_tiles - wt, 0)))
+    window = jnp.asarray([t_low, t_high], jnp.float32)
+
+    grid = (next_tiles, wt)
+    kernel = pl.pallas_call(
+        _track_level_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bn,), lambda i, j, st, w: (i,)),
+                pl.BlockSpec((bp,), lambda i, j, st, w: (st[i] + j,)),
+                pl.BlockSpec((bp,), lambda i, j, st, w: (st[i] + j,)),
+            ],
+            out_specs=pl.BlockSpec((bn,), lambda i, j, st, w: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((cap,), jnp.float32),
+        interpret=interpret,
+    )
+    return kernel(start_tile, window, t_next, t_prev, v_prev)

@@ -1,0 +1,104 @@
+"""jit'd public wrappers around the Pallas kernels (+ exactness bounds)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import episode_track as _et
+from . import ref as _ref
+
+NEG = -jnp.inf
+
+
+def required_window_tiles(
+    t_prev: np.ndarray, t_next: np.ndarray, t_high: float,
+    block_next: int, block_prev: int,
+) -> int:
+    """Host-side tight bound on prev tiles any next tile's window can span.
+
+    A next tile [a0, a1] needs prev events in [a0 - t_high, a1); the kernel
+    starts at tile(searchsorted(a0 - t_high)) so the span in events is
+    searchsorted(a1^-) - searchsorted(a0 - t_high), plus one tile of
+    misalignment slack.
+    """
+    t_prev = np.asarray(t_prev)
+    t_next = np.asarray(t_next)
+    cap = t_prev.shape[0]
+    nt = cap // block_next
+    tiles = 1
+    for i in range(nt):
+        blk = t_next[i * block_next:(i + 1) * block_next]
+        finite = blk[np.isfinite(blk)]
+        if finite.size == 0:
+            continue
+        lo_i = np.searchsorted(t_prev, finite.min() - t_high, side="left")
+        hi_i = np.searchsorted(t_prev, finite.max(), side="left")
+        span = int(hi_i - lo_i)
+        tiles = max(tiles, span // block_prev + 2)
+    return min(tiles, cap // block_prev)
+
+
+def track_level(
+    t_prev: jax.Array,
+    v_prev: jax.Array,
+    t_next: jax.Array,
+    t_low: float,
+    t_high: float,
+    *,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    use_kernel: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One tracking level; Pallas kernel on TPU, oracle fallback elsewhere."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not use_kernel:
+        return _ref.track_level_ref(t_prev, v_prev, t_next, t_low, t_high)
+    cap = t_prev.shape[0]
+    bn = _largest_divisor_block(cap, block_next)
+    bp = _largest_divisor_block(cap, block_prev)
+    return _et.track_level_pallas(
+        t_prev, v_prev, t_next, t_low, t_high,
+        block_next=bn, block_prev=bp, window_tiles=window_tiles,
+        interpret=interpret)
+
+
+def _largest_divisor_block(cap: int, want: int) -> int:
+    b = min(want, cap)
+    while cap % b:
+        b -= 1
+    return max(b, 1)
+
+
+def track_episode(
+    times_by_sym: jax.Array,   # f32[N, cap]
+    t_low,
+    t_high,
+    *,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
+):
+    """Full multi-level tracking through the kernel; returns (starts, ends)."""
+    n = times_by_sym.shape[0]
+    t0 = times_by_sym[0]
+    v = jnp.where(jnp.isfinite(t0), t0, NEG)
+    lows = np.asarray(t_low, np.float32).reshape(-1)
+    highs = np.asarray(t_high, np.float32).reshape(-1)
+    for i in range(n - 1):
+        v = track_level(
+            times_by_sym[i], v, times_by_sym[i + 1],
+            float(lows[i]), float(highs[i]),
+            block_next=block_next, block_prev=block_prev,
+            window_tiles=window_tiles, interpret=interpret)
+        v = jnp.where(jnp.isfinite(times_by_sym[i + 1]), v, NEG)
+    ends = times_by_sym[n - 1]
+    valid = (v > NEG) & jnp.isfinite(ends)
+    return jnp.where(valid, v, NEG), jnp.where(valid, ends, jnp.inf)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for chunked WKV (RWKV6-family gated linear recurrence).
+
+The third member of this repo's scan-transformation family (with
+episode_track and flash_attention): the sequential per-token recurrence
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;   o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+becomes, per (batch, head), a grid walk over chunks of L tokens whose
+[hd, hd] state lives in VMEM scratch across grid steps; inside a chunk the
+pairwise term is an (L, L) masked matmul with per-channel decay factors
+(all exponents <= 0 by construction — see models/rwkv6.py for the
+normalizer algebra). One kernel invocation = whole sequence; HBM traffic is
+exactly one read of r/k/v/w and one write of o.
+
+VMEM per step @ L=128, hd=64 fp32: 4 chunk tiles + scores + state
+~= 4*32 KB + 64 KB + 16 KB ~= 0.2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)          # [L, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    lw = lw_ref[0, :, 0, :].astype(jnp.float32)        # log decay, <= 0
+    u = u_ref[0, :]                                    # [hd]
+
+    bcum = jnp.cumsum(lw, axis=0)                      # inclusive
+    bex = bcum - lw                                    # exclusive (b_{t-1})
+    btot = bcum[-1]                                    # [hd]
+
+    qp = r * jnp.exp(bex - btot[None, :])              # exponents >= 0, bounded
+    kp = k * jnp.exp(btot[None, :] - bcum)             # exponents <= 0
+    scores = jnp.dot(qp, kp.T, preferred_element_type=jnp.float32)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(lj < li, scores, 0.0)           # strict causal in-chunk
+    o = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    # current-token bonus
+    o = o + jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v
+    # carry-in state contribution and state update
+    s = s_ref[...]
+    o = o + jnp.dot(r * jnp.exp(bex), s, preferred_element_type=jnp.float32)
+    kv = jnp.dot(kp.T, v, preferred_element_type=jnp.float32)   # [hd, hd]
+    s_ref[...] = jnp.exp(btot)[:, None] * s + kv
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_chunked(r, k, v, logw, u, *, chunk: int = 64,
+                interpret: bool = False):
+    """r/k/v/logw: [b, T, h, hd] (logw <= 0); u: [h, hd]. Returns o
+    [b, T, h, hd] (pre-receptance-gate WKV output)."""
+    b, t, h, hd = r.shape
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    grid = (b, h, t // c)
+    spec = pl.BlockSpec((1, c, 1, hd), lambda bi, hi, ci: (bi, ci, hi, 0))
+    kernel = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=c),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, hd), lambda bi, hi, ci: (hi, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, h, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )
+    return kernel(r, k, v, logw, u)

@@ -1,0 +1,4 @@
+from .model import Model
+from . import attention, blocks, layers, moe, rglru, rwkv6
+
+__all__ = ["Model", "attention", "blocks", "layers", "moe", "rglru", "rwkv6"]

@@ -1,0 +1,147 @@
+"""GQA/MQA attention with RoPE, optional qk-norm and local windows.
+
+Train/prefill path computes full (or banded) attention; the decode path
+consumes a KV cache: global attention keeps a [B, cache_len, kv, hd] cache,
+local attention keeps a ring buffer of ``window`` slots (so recurrentgemma's
+long_500k decode state stays O(window), see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import flash, layers
+
+NEG = jnp.float32(-1e30)  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+def init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": layers.dense_init(ks[0], cfg.d_model, cfg.q_dim, bias=cfg.use_bias),
+        "wk": layers.dense_init(ks[1], cfg.d_model, cfg.kv_dim, bias=cfg.use_bias),
+        "wv": layers.dense_init(ks[2], cfg.d_model, cfg.kv_dim, bias=cfg.use_bias),
+        "wo": layers.dense_init(ks[3], cfg.q_dim, cfg.d_model, bias=cfg.use_bias),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def specs(cfg: ArchConfig):
+    p = {
+        "wq": layers.dense_specs("embed", "q_proj", bias=cfg.use_bias),
+        "wk": layers.dense_specs("embed", "kv_proj", bias=cfg.use_bias),
+        "wv": layers.dense_specs("embed", "kv_proj", bias=cfg.use_bias),
+        "wo": layers.dense_specs("q_proj", "embed", bias=cfg.use_bias),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = (None,)
+        p["k_norm"] = (None,)
+    return p
+
+
+def _qkv(p, cfg: ArchConfig, x, positions):
+    b, s, _ = x.shape
+    q = layers.dense(p["wq"], x).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = layers.dense(p["wk"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = layers.dense(p["wv"], x).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = layers.head_rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = layers.head_rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend(q, k, v, mask, n_kv: int):
+    """q: [b,sq,hq,hd]; k/v: [b,sk,kv,hd]; mask: [b,1,sq,sk] bool."""
+    b, sq, hq, hd = q.shape
+    group = hq // n_kv
+    qg = q.reshape(b, sq, n_kv, group, hd)
+    logits = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    logits = jnp.where(mask[:, :, None], logits, NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq * hd).astype(q.dtype)
+
+
+FLASH_MIN_SEQ = 2048  # below this the full-matrix path is cheaper
+
+
+def forward(p, cfg: ArchConfig, x, positions, *, window: Optional[int] = None,
+            kv_chunk: int = 512, constrain=lambda x, name: x):
+    """Full-sequence (train / prefill) attention. Sequences >= FLASH_MIN_SEQ
+    use the chunked online-softmax path (models/flash.py) so the [s, s]
+    score matrix is never materialized. GQA K/V are pre-expanded to flat
+    q-heads so the head axis shards cleanly over the mesh model axis."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if s >= FLASH_MIN_SEQ:
+        group = cfg.n_heads // cfg.n_kv_heads
+        if group > 1:
+            k = jnp.repeat(k, group, axis=2)
+            v = jnp.repeat(v, group, axis=2)
+        q = constrain(q, "attn_heads")
+        k = constrain(k, "attn_heads")
+        v = constrain(v, "attn_heads")
+        out = flash.flash_attend(q, k, v, positions, positions, window,
+                                 kv_chunk)
+        out = out.reshape(b, s, cfg.q_dim).astype(x.dtype)
+    else:
+        pos_q = positions[:, :, None]           # [b,s,1]
+        pos_k = positions[:, None, :]           # [b,1,s]
+        mask = pos_k <= pos_q                   # causal
+        if window is not None:
+            mask = mask & (pos_k > pos_q - window)
+        out = _attend(q, k, v, mask[:, None], cfg.n_kv_heads)
+    return layers.dense(p["wo"], out)
+
+
+# ------------------------------ decode path ---------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
+               window: Optional[int] = None, dtype=jnp.bfloat16):
+    slots = min(window, cache_len) if window is not None else cache_len
+    return {
+        "k": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.head_dim), dtype),
+        # absolute position stored in each slot (-1 = empty)
+        "pos": jnp.full((batch, slots), -1, jnp.int32),
+    }
+
+
+def cache_specs(cfg: ArchConfig):
+    return {"k": ("batch", "cache_seq", "kv_heads", None),
+            "v": ("batch", "cache_seq", "kv_heads", None),
+            "pos": ("batch", "cache_seq")}
+
+
+def decode_step(p, cfg: ArchConfig, cache, x, pos, *,
+                window: Optional[int] = None):
+    """One-token decode. x: [b,1,d]; pos: [b] absolute position.
+
+    Global attention writes slot ``pos``; local attention writes ring slot
+    ``pos % window``. Masking uses per-slot absolute positions, so both
+    cases share one attend path.
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(p, cfg, x, pos[:, None])
+    slots = cache["k"].shape[1]
+    slot = (pos % slots).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+    mask = (cpos[:, None, :] >= 0) & (cpos[:, None, :] <= pos[:, None, None])
+    if window is not None:
+        mask = mask & (cpos[:, None, :] > pos[:, None, None] - window)
+    out = _attend(q, ck, cv, mask[:, None], cfg.n_kv_heads)
+    out = layers.dense(p["wo"], out)
+    return out, {"k": ck, "v": cv, "pos": cpos}

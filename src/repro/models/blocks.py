@@ -1,0 +1,264 @@
+"""Decoder blocks + the scan-over-layers stack.
+
+Layers are grouped into *super-blocks* of ``len(cfg.block_pattern)`` layers
+(e.g. recurrentgemma's (rec, rec, attn)); identical super-blocks are stacked
+along a leading axis and iterated with ``lax.scan`` so HLO size — and hence
+512-device compile time — is O(1) in depth. Layers that do not fill a whole
+super-block are unrolled as ``tail`` layers.
+
+Block kinds:
+  attn   pre-norm GQA attention + pre-norm FFN (dense or MoE)
+  local  same, with a sliding window
+  rec    pre-norm RG-LRU recurrent block + pre-norm FFN
+  rwkv   RWKV6 time-mix + channel-mix
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from . import attention, layers, moe, rglru, rwkv6
+
+Constrain = Callable[[jax.Array, str], jax.Array]
+_IDENT: Constrain = lambda x, name: x
+
+
+def _ffn_init(key, cfg: ArchConfig):
+    if cfg.moe is not None:
+        return moe.init(key, cfg)
+    return layers.mlp_init(key, cfg.d_model, cfg.d_ff, cfg.mlp, cfg.use_bias)
+
+
+def _ffn_specs(cfg: ArchConfig):
+    if cfg.moe is not None:
+        return moe.specs(cfg)
+    return layers.mlp_specs(cfg.mlp, cfg.use_bias)
+
+
+def _ffn_apply(p, cfg: ArchConfig, x, constrain=_IDENT, mesh=None):
+    if cfg.moe is not None:
+        y, _ = moe.forward(p, cfg, x, constrain, mesh=mesh)
+        aux = moe.load_balance_loss(p, cfg, x)
+        return y, aux
+    return layers.mlp(p, x, cfg.mlp), jnp.float32(0.0)
+
+
+def block_init(key, cfg: ArchConfig, kind: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "rwkv":
+        return {
+            "norm1": layers.rmsnorm_init(cfg.d_model),
+            "norm2": layers.rmsnorm_init(cfg.d_model),
+            "rwkv": rwkv6.init(k1, cfg),
+        }
+    mix = rglru.init(k1, cfg) if kind == "rec" else attention.init(k1, cfg)
+    return {
+        "norm1": layers.rmsnorm_init(cfg.d_model),
+        "mix": mix,
+        "norm2": layers.rmsnorm_init(cfg.d_model),
+        "ffn": _ffn_init(k2, cfg),
+    }
+
+
+def block_specs(cfg: ArchConfig, kind: str):
+    if kind == "rwkv":
+        return {
+            "norm1": layers.rmsnorm_specs(),
+            "norm2": layers.rmsnorm_specs(),
+            "rwkv": rwkv6.specs(cfg),
+        }
+    mix = rglru.specs(cfg) if kind == "rec" else attention.specs(cfg)
+    return {
+        "norm1": layers.rmsnorm_specs(),
+        "mix": mix,
+        "norm2": layers.rmsnorm_specs(),
+        "ffn": _ffn_specs(cfg),
+    }
+
+
+def block_apply(p, cfg: ArchConfig, kind: str, x, positions, constrain=_IDENT,
+                mesh=None):
+    """One decoder layer (full-sequence path). Returns (x, aux_loss)."""
+    h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind == "rwkv":
+        x = x + rwkv6.forward(p["rwkv"], cfg, h)
+        x = constrain(x, "hidden")
+        h2 = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + rwkv6.channel_mix(p["rwkv"], cfg, h2)
+        return constrain(x, "hidden"), jnp.float32(0.0)
+    if kind == "rec":
+        x = x + rglru.forward(p["mix"], cfg, h)
+    else:
+        window = cfg.window if kind == "local" else None
+        x = x + attention.forward(p["mix"], cfg, h, positions, window=window,
+                                  constrain=constrain)
+    x = constrain(x, "hidden")
+    h2 = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    y, aux = _ffn_apply(p["ffn"], cfg, h2, constrain, mesh)
+    return constrain(x + y, "hidden"), aux
+
+
+# --------------------------- stacked layer stack -----------------------------
+
+
+def stack_init(key, cfg: ArchConfig):
+    pattern = cfg.block_pattern
+    n_super, n_tail = divmod(cfg.n_layers, len(pattern))
+    if n_super < 1:
+        raise ValueError(
+            f"n_layers={cfg.n_layers} must cover one block_pattern {pattern}")
+    keys = jax.random.split(key, len(pattern) + n_tail)
+    scan_params = []
+    for pos, kind in enumerate(pattern):
+        sub = jax.random.split(keys[pos], n_super)
+        scan_params.append(jax.vmap(lambda k: block_init(k, cfg, kind))(sub))
+    tail = [
+        block_init(keys[len(pattern) + i], cfg, pattern[i % len(pattern)])
+        for i in range(n_tail)
+    ]
+    return {"scan": scan_params, "tail": tail}
+
+
+def stack_specs(cfg: ArchConfig):
+    pattern = cfg.block_pattern
+    n_super, n_tail = divmod(cfg.n_layers, len(pattern))
+    del n_super
+
+    def add_layer_axis(tree):
+        return jax.tree.map(lambda spec: ("layers",) + tuple(spec), tree,
+                            is_leaf=lambda v: isinstance(v, tuple))
+
+    scan_specs = [add_layer_axis(block_specs(cfg, kind)) for kind in pattern]
+    tail = [block_specs(cfg, pattern[i % len(pattern)]) for i in range(n_tail)]
+    return {"scan": scan_specs, "tail": tail}
+
+
+def stack_apply(params, cfg: ArchConfig, x, positions, *,
+                constrain: Constrain = _IDENT, remat: str = "full", mesh=None):
+    """Apply all layers. Returns (x, aux_loss_sum)."""
+    pattern = cfg.block_pattern
+
+    def superblock(h, slice_params):
+        aux = jnp.float32(0.0)
+        for pos, kind in enumerate(pattern):
+            h, a = block_apply(slice_params[pos], cfg, kind, h, positions,
+                               constrain, mesh)
+            aux = aux + a
+        return h, aux
+
+    if remat == "full":
+        superblock = jax.checkpoint(superblock)
+    elif remat == "dots":
+        superblock = jax.checkpoint(
+            superblock, policy=jax.checkpoint_policies.checkpoint_dots)
+    elif remat == "dots_no_batch":
+        superblock = jax.checkpoint(
+            superblock,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+    def scan_body(carry, slice_params):
+        h, aux = carry
+        h, a = superblock(h, slice_params)
+        return (h, aux + a), None
+
+    (x, aux), _ = lax.scan(scan_body, (x, jnp.float32(0.0)), params["scan"])
+    for i, p in enumerate(params["tail"]):
+        kind = pattern[i % len(pattern)]
+        x, a = block_apply(p, cfg, kind, x, positions, constrain, mesh)
+        aux = aux + a
+    return x, aux
+
+
+# ------------------------------ decode stack --------------------------------
+
+
+def stack_cache_init(cfg: ArchConfig, batch: int, cache_len: int):
+    pattern = cfg.block_pattern
+    n_super, n_tail = divmod(cfg.n_layers, len(pattern))
+
+    def one(kind):
+        if kind == "rwkv":
+            return rwkv6.init_cache(cfg, batch)
+        if kind == "rec":
+            return rglru.init_cache(cfg, batch)
+        window = cfg.window if kind == "local" else None
+        return attention.init_cache(cfg, batch, cache_len, window=window)
+
+    scan_caches = [
+        jax.tree.map(lambda a: jnp.broadcast_to(a, (max(n_super, 1),) + a.shape),
+                     one(kind))
+        for kind in pattern
+    ]
+    tail = [one(pattern[i % len(pattern)]) for i in range(n_tail)]
+    return {"scan": scan_caches, "tail": tail}
+
+
+def stack_cache_specs(cfg: ArchConfig):
+    pattern = cfg.block_pattern
+    n_super, n_tail = divmod(cfg.n_layers, len(pattern))
+    del n_super
+
+    def one(kind):
+        if kind == "rwkv":
+            return rwkv6.cache_specs(cfg)
+        if kind == "rec":
+            return rglru.cache_specs(cfg)
+        return attention.cache_specs(cfg)
+
+    def add_layer_axis(tree):
+        return jax.tree.map(lambda spec: ("layers",) + tuple(spec), tree,
+                            is_leaf=lambda v: isinstance(v, tuple))
+
+    return {"scan": [add_layer_axis(one(k)) for k in pattern],
+            "tail": [one(pattern[i % len(pattern)]) for i in range(n_tail)]}
+
+
+def block_decode(p, cfg: ArchConfig, kind: str, cache, x, pos, mesh=None):
+    h = layers.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind == "rwkv":
+        o, cache = rwkv6.decode_time_mix(p["rwkv"], cfg, cache, h)
+        x = x + o
+        h2 = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        o2, cache = rwkv6.decode_channel_mix(p["rwkv"], cfg, cache, h2)
+        return x + o2, cache
+    if kind == "rec":
+        o, cache = rglru.decode_step(p["mix"], cfg, cache, h)
+        x = x + o
+    else:
+        window = cfg.window if kind == "local" else None
+        o, cache = attention.decode_step(p["mix"], cfg, cache, h, pos, window=window)
+        x = x + o
+    h2 = layers.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    y, _ = _ffn_apply(p["ffn"], cfg, h2, mesh=mesh)
+    return x + y, cache
+
+
+def stack_decode(params, cfg: ArchConfig, caches, x, pos, mesh=None):
+    """One-token decode through all layers. Returns (x, new_caches)."""
+    pattern = cfg.block_pattern
+
+    def superblock(h, slice_params, slice_caches):
+        new_caches = []
+        for p_, kind in enumerate(pattern):
+            h, c = block_decode(slice_params[p_], cfg, kind, slice_caches[p_], h,
+                                pos, mesh)
+            new_caches.append(c)
+        return h, new_caches
+
+    def scan_body(h, xs):
+        slice_params, slice_caches = xs
+        h, new_caches = superblock(h, slice_params, slice_caches)
+        return h, new_caches
+
+    x, new_scan = lax.scan(scan_body, x, (params["scan"], caches["scan"]))
+    new_tail = []
+    for i, p in enumerate(params["tail"]):
+        kind = pattern[i % len(pattern)]
+        x, c = block_decode(p, cfg, kind, caches["tail"][i], x, pos, mesh)
+        new_tail.append(c)
+    return x, {"scan": new_scan, "tail": new_tail}

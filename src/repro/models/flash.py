@@ -1,0 +1,215 @@
+"""Memory-efficient (flash) attention in pure XLA, with causal block
+skipping: a scan over the *static list of live (q-block, kv-block) pairs*.
+
+For causal attention only n(n+1)/2 of the n^2 block pairs are live; for
+windowed attention only ~(window/block + 1) pairs per q block. Dead blocks
+are never computed (the paper's "thread stops scanning past t_high"
+transplanted to attention tiling — compare kernels/episode_track.py's
+scalar-prefetched window tiles). The backward pass recomputes per-pair
+scores (custom_vjp), so neither direction materializes [sq, sk].
+
+This is the XLA-expressible twin of kernels/flash_attention.py (the Pallas
+kernel used on real hardware). Layout: q/k/v [b, s, h, hd] with FLAT heads
+— GQA is pre-expanded by the caller so the head axis shards cleanly over
+the mesh model axis. Softmax statistics fp32; the P tile feeds the PV
+matmul in bf16 (FlashAttention-2 discipline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG = jnp.float32(-1e30)
+
+
+def _pick_chunk(s: int, want: int) -> int:
+    c = min(want, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _live_pairs(nq: int, nk: int, qc: int, kc: int,
+                window: Optional[int], causal: bool = True):
+    """Static list of (q_block, kv_block) pairs that can contain unmasked
+    entries. Causal: kv start <= q end. Window: kv end > q start - window."""
+    pairs = []
+    for qi in range(nq):
+        q_lo, q_hi = qi * qc, qi * qc + qc - 1
+        for ki in range(nk):
+            k_lo, k_hi = ki * kc, ki * kc + kc - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window is not None and k_hi <= q_lo - window:
+                continue
+            pairs.append((qi, ki))
+    return pairs
+
+
+def _block_mask(pos_qc, pos_kc, window):
+    # pos_qc: [b, QC]; pos_kc: [b, KC] -> [b, 1, QC, KC]
+    m = pos_kc[:, None, None, :] <= pos_qc[:, None, :, None]
+    if window is not None:
+        m = m & (pos_kc[:, None, None, :] > pos_qc[:, None, :, None] - window)
+    return m
+
+
+def _chunk(x, n, c):
+    # [b, s, ...] -> [n, b, c, ...]
+    b = x.shape[0]
+    return jnp.moveaxis(x.reshape((b, n, c) + x.shape[2:]), 1, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def flash_attend(q, k, v, pos_q, pos_k, window: Optional[int],
+                 kv_chunk: int = 512):
+    out, _ = _flash_fwd_impl(q, k, v, pos_q, pos_k, window, kv_chunk)
+    return out
+
+
+def _prep(q, k, v, pos_q, pos_k, chunk):
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    qc = _pick_chunk(sq, chunk)
+    kc = _pick_chunk(sk, chunk)
+    nq, nk = sq // qc, sk // kc
+    qs = _chunk(q.astype(jnp.float32), nq, qc)     # [nq, b, qc, h, hd]
+    ks = _chunk(k.astype(jnp.float32), nk, kc)
+    vs = _chunk(v.astype(jnp.float32), nk, kc)
+    pq = _chunk(pos_q, nq, qc)                     # [nq, b, qc]
+    pk = _chunk(pos_k, nk, kc)
+    return qs, ks, vs, pq, pk, (nq, nk, qc, kc)
+
+
+def _flash_fwd_impl(q, k, v, pos_q, pos_k, window, kv_chunk):
+    b, sq, h, hd = q.shape
+    scale = hd ** -0.5
+    qs, ks, vs, pq, pk, (nq, nk, qc, kc) = _prep(q, k, v, pos_q, pos_k, kv_chunk)
+    pairs = _live_pairs(nq, nk, qc, kc, window)
+    qis = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    kis = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    m0 = jnp.full((nq, b, h, qc), NEG, jnp.float32)
+    l0 = jnp.zeros((nq, b, h, qc), jnp.float32)
+    a0 = jnp.zeros((nq, b, qc, h, hd), jnp.float32)
+
+    def body(carry, pair):
+        m, l, acc = carry
+        qi, ki = pair
+        q_c = lax.dynamic_index_in_dim(qs, qi, 0, keepdims=False)
+        k_c = lax.dynamic_index_in_dim(ks, ki, 0, keepdims=False)
+        v_c = lax.dynamic_index_in_dim(vs, ki, 0, keepdims=False)
+        pq_c = lax.dynamic_index_in_dim(pq, qi, 0, keepdims=False)
+        pk_c = lax.dynamic_index_in_dim(pk, ki, 0, keepdims=False)
+        logits = jnp.einsum("bshd,bthd->bhst", q_c, k_c) * scale
+        mask = _block_mask(pq_c, pk_c, window)
+        logits = jnp.where(mask, logits, NEG)
+        m_prev = lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_prev = lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_prev = lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        p = jnp.where(mask, jnp.exp(logits - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhst,bthd->bshd", p.astype(jnp.bfloat16),
+                        v_c.astype(jnp.bfloat16)).astype(jnp.float32)
+        a_new = a_prev * jnp.swapaxes(corr, 1, 2)[..., None] + pv
+        m = lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (qis, kis))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / jnp.swapaxes(l_safe, 2, 3)[..., None]
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, hd).astype(q.dtype)
+    lse = jnp.moveaxis(m + jnp.log(l_safe), 0, 1)       # [b, nq, h, qc]
+    lse = jnp.moveaxis(lse, 2, 1).reshape(b, h, sq)     # [b, h, sq]
+    return out, lse
+
+
+def _flash_fwd(q, k, v, pos_q, pos_k, window, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, pos_q, pos_k, window, kv_chunk)
+    return out, (q, k, v, pos_q, pos_k, out, lse)
+
+
+def _flash_bwd(window, kv_chunk, res, dout):
+    q, k, v, pos_q, pos_k, out, lse = res
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    qs, ks, vs, pq, pk, (nq, nk, qc, kc) = _prep(q, k, v, pos_q, pos_k, kv_chunk)
+    pairs = _live_pairs(nq, nk, qc, kc, window)
+    qis = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    kis = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    do = _chunk(dout.astype(jnp.float32), nq, qc)       # [nq, b, qc, h, hd]
+    delta_full = jnp.swapaxes(
+        jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1), 1, 2)
+    dl = _chunk(jnp.swapaxes(delta_full, 1, 2)[..., None], nq, qc)[..., 0]
+    dl = jnp.swapaxes(dl, 2, 3)                         # [nq, b, h, qc]
+    lse_c = _chunk(jnp.swapaxes(lse, 1, 2)[..., None], nq, qc)[..., 0]
+    lse_c = jnp.swapaxes(lse_c, 2, 3)                   # [nq, b, h, qc]
+
+    dq0 = jnp.zeros((nq, b, qc, h, hd), jnp.float32)
+    dk0 = jnp.zeros((nk, b, kc, h, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, b, kc, h, hd), jnp.float32)
+
+    def body(carry, pair):
+        dq, dk, dv = carry
+        qi, ki = pair
+        q_c = lax.dynamic_index_in_dim(qs, qi, 0, keepdims=False)
+        k_c = lax.dynamic_index_in_dim(ks, ki, 0, keepdims=False)
+        v_c = lax.dynamic_index_in_dim(vs, ki, 0, keepdims=False)
+        pq_c = lax.dynamic_index_in_dim(pq, qi, 0, keepdims=False)
+        pk_c = lax.dynamic_index_in_dim(pk, ki, 0, keepdims=False)
+        do_c = lax.dynamic_index_in_dim(do, qi, 0, keepdims=False)
+        lse_b = lax.dynamic_index_in_dim(lse_c, qi, 0, keepdims=False)
+        dl_b = lax.dynamic_index_in_dim(dl, qi, 0, keepdims=False)
+        logits = jnp.einsum("bshd,bthd->bhst", q_c, k_c) * scale
+        mask = _block_mask(pq_c, pk_c, window)
+        p = jnp.where(mask, jnp.exp(logits - lse_b[..., None]), 0.0)
+        pb = p.astype(jnp.bfloat16)
+        dob = do_c.astype(jnp.bfloat16)
+        dv_c = jnp.einsum("bhst,bshd->bthd", pb, dob).astype(jnp.float32)
+        dp = jnp.einsum("bshd,bthd->bhst", do_c, v_c)
+        ds = (p * (dp - dl_b[..., None]) * scale).astype(jnp.bfloat16)
+        dq_c = jnp.einsum("bhst,bthd->bshd", ds,
+                          k_c.astype(jnp.bfloat16)).astype(jnp.float32)
+        dk_c = jnp.einsum("bhst,bshd->bthd", ds,
+                          q_c.astype(jnp.bfloat16)).astype(jnp.float32)
+        dq = dq.at[qi].add(dq_c)
+        dk = dk.at[ki].add(dk_c)
+        dv = dv.at[ki].add(dv_c)
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = lax.scan(body, (dq0, dk0, dv0), (qis, kis))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(b, sq, h, hd).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(b, sk, h, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(b, sk, h, hd).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+flash_attend.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attend_reference(q, k, v, pos_q, pos_k, window: Optional[int]):
+    """Plain full-matrix attention (oracle / small-seq path).
+    Same flat-head layout as flash_attend."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = (pos_k[:, None, None, :] <= pos_q[:, None, :, None])
+    if window is not None:
+        mask = mask & (pos_k[:, None, None, :]
+                       > pos_q[:, None, :, None] - window)
+    logits = jnp.where(mask, logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,135 @@
+"""Shared neural-net layers (pure-function style: params are dict pytrees).
+
+Conventions:
+  * activations default bf16, params fp32 (cast at use), reductions fp32;
+  * every init function takes an explicit PRNG key and returns a dict;
+  * logical sharding axes for each weight are declared alongside init in
+    *_specs() twins, consumed by repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Init = jax.nn.initializers
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense_specs(axes_in: str, axes_out: str, *, bias: bool = False):
+    p = {"w": (axes_in, axes_out)}
+    if bias:
+        p["b"] = (axes_out,)
+    return p
+
+
+def dense(p, x, compute_dtype=jnp.bfloat16):
+    w = p["w"].astype(compute_dtype)
+    y = x.astype(compute_dtype) @ w
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_specs():
+    return {"g": (None,)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["g"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def head_rmsnorm(g, x, eps: float = 1e-5):
+    """qk-norm: RMS over the head_dim of [*, heads, head_dim]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------- RoPE --------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------- MLP ---------------------------------------
+
+
+def mlp_init(key, d: int, ff: int, kind: str = "swiglu", bias: bool = False):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "gate": dense_init(ks[0], d, ff, bias=bias),
+            "up": dense_init(ks[1], d, ff, bias=bias),
+            "down": dense_init(ks[2], ff, d, bias=bias),
+        }
+    return {
+        "up": dense_init(ks[1], d, ff, bias=bias),
+        "down": dense_init(ks[2], ff, d, bias=bias),
+    }
+
+
+def mlp_specs(kind: str = "swiglu", bias: bool = False):
+    if kind == "swiglu":
+        return {
+            "gate": dense_specs("embed", "ff", bias=bias),
+            "up": dense_specs("embed", "ff", bias=bias),
+            "down": dense_specs("ff", "embed", bias=bias),
+        }
+    return {
+        "up": dense_specs("embed", "ff", bias=bias),
+        "down": dense_specs("ff", "embed", bias=bias),
+    }
+
+
+def mlp(p, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+
+# ----------------------------- Embeddings -----------------------------------
+
+
+def embed_init(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed_specs():
+    return {"table": ("vocab", "embed")}
+
+
+def embed_lookup(p, tokens, compute_dtype=jnp.bfloat16):
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(p, x, compute_dtype=jnp.bfloat16):
+    return x.astype(compute_dtype) @ p["table"].astype(compute_dtype).T

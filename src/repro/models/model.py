@@ -1,0 +1,148 @@
+"""The unified decoder-only model over all assigned architectures.
+
+Pure-function API (pjit-friendly):
+    m = Model(cfg)
+    params = m.init(rng)                      # eval_shape-able
+    logits = m.forward(params, batch)
+    loss, metrics = m.loss(params, batch)
+    cache = m.init_cache(batch_size, cache_len)
+    logits, cache = m.decode_step(params, cache, tokens, pos)
+
+Modality frontends are stubs per the assignment: pixtral consumes
+precomputed patch embeddings (projected + prepended to the text sequence),
+musicgen consumes precomputed EnCodec code ids (vocab 2048).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import blocks, layers, xent
+
+Constrain = Callable[[jax.Array, str], jax.Array]
+_IDENT: Constrain = lambda x, name: x
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    constrain: Constrain = _IDENT          # activation sharding hook
+    remat: str = "full"                    # full | dots | dots_no_batch | none
+    aux_loss_weight: float = 0.01
+    xent_chunk: int = 512                  # sequence chunk for the CE loss
+    mesh: Any = None                       # enables shard_map paths (MoE EP)
+
+    # ------------------------------ params ---------------------------------
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        p: Dict[str, Any] = {
+            "embed": layers.embed_init(ks[0], cfg.vocab, cfg.d_model),
+            "stack": blocks.stack_init(ks[1], cfg),
+            "final_norm": layers.rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = layers.dense_init(ks[2], cfg.d_model, cfg.vocab)
+        if cfg.frontend == "vision":
+            p["patch_proj"] = layers.dense_init(ks[3], cfg.d_patch, cfg.d_model)
+        return p
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        p: Dict[str, Any] = {
+            "embed": layers.embed_specs(),
+            "stack": blocks.stack_specs(cfg),
+            "final_norm": layers.rmsnorm_specs(),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = layers.dense_specs("embed", "vocab")
+        if cfg.frontend == "vision":
+            p["patch_proj"] = layers.dense_specs(None, "embed")
+        return p
+
+    # ----------------------------- forward ---------------------------------
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = layers.embed_lookup(params["embed"], batch["tokens"])
+        if cfg.frontend == "vision" and "patches" in batch:
+            pe = layers.dense(params["patch_proj"], batch["patches"])
+            x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return x, positions
+
+    def forward(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """Returns (logits [b, s_total, vocab], aux_loss)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x = self.constrain(x, "hidden")
+        x, aux = blocks.stack_apply(
+            params["stack"], cfg, x, positions,
+            constrain=self.constrain, remat=self.remat, mesh=self.mesh)
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = layers.unembed(params["embed"], x)
+        else:
+            logits = layers.dense(params["lm_head"], x)
+        return self.constrain(logits, "logits"), aux
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Causal LM loss with sequence-chunked cross-entropy (models/xent.py)
+        so the [b, s, V] logits are never fully materialized.
+        batch needs tokens/targets (+optional loss_mask)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        x = self.constrain(x, "hidden")
+        x, aux = blocks.stack_apply(
+            params["stack"], cfg, x, positions,
+            constrain=self.constrain, remat=self.remat, mesh=self.mesh)
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        targets = batch["targets"]
+        # vision prefix: hidden covers [patches|text]; targets cover text only
+        if x.shape[1] != targets.shape[1]:
+            x = x[:, x.shape[1] - targets.shape[1]:]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones(targets.shape, jnp.float32)
+        mask = mask.astype(jnp.float32)
+        if cfg.tie_embeddings:
+            w = params["embed"]["table"].T
+        else:
+            w = params["lm_head"]["w"]
+        ce_sum, n = xent.chunked_xent(
+            x, w, targets, mask, chunk=self.xent_chunk,
+            constrain=self.constrain)
+        ce = ce_sum / jnp.maximum(n, 1.0)
+        total = ce + self.aux_loss_weight * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ------------------------------ decode ---------------------------------
+
+    def init_cache(self, batch: int, cache_len: int):
+        return blocks.stack_cache_init(self.cfg, batch, cache_len)
+
+    def cache_specs(self):
+        return blocks.stack_cache_specs(self.cfg)
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: [b] int32 (next token ids); pos: [b] absolute positions.
+
+        Returns (logits [b, vocab], new_cache).
+        """
+        cfg = self.cfg
+        x = layers.embed_lookup(params["embed"], tokens[:, None])
+        x = self.constrain(x, "decode_hidden")
+        x, new_cache = blocks.stack_decode(params["stack"], cfg, cache, x, pos,
+                                           mesh=self.mesh)
+        x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = layers.unembed(params["embed"], x)
+        else:
+            logits = layers.dense(params["lm_head"], x)
+        return logits[:, 0], new_cache

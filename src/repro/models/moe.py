@@ -1,0 +1,231 @@
+"""Mixture-of-Experts FFN: top-k routing, shared + fine-grained experts.
+
+Dispatch is the capacity-based scatter/gather formulation (no giant GShard
+one-hot einsum tensors, no global sort): position-in-expert comes from a
+cumulative sum over the token axis, tokens are scattered into a static
+[E, C, d] buffer (k scatters of [T, d]) and gathered back after the batched
+expert GEMMs. Expert weights and the [E, C, *] buffers shard their leading
+E axis over the mesh ``model`` axis (expert parallelism); GSPMD inserts the
+dispatch all-to-alls. Over-capacity tokens are dropped (standard Switch
+semantics) — ``capacity_factor`` controls the drop rate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, MoECfg
+from . import layers
+
+
+def _capacity(n_tokens: int, m: MoECfg) -> int:
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts) + 1
+    return max(128, -(-c // 128) * 128)  # multiple of 128 for clean layouts
+
+
+def init(key, cfg: ArchConfig):
+    m = cfg.moe
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 6)
+    e = m.n_experts
+    s = d ** -0.5
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d, e), jnp.float32) * s},
+        "w_gate": jax.random.normal(ks[1], (e, d, ff), jnp.float32) * s,
+        "w_up": jax.random.normal(ks[2], (e, d, ff), jnp.float32) * s,
+        "w_down": jax.random.normal(ks[3], (e, ff, d), jnp.float32) * (ff ** -0.5),
+    }
+    if m.n_shared:
+        p["shared"] = [
+            layers.mlp_init(k, d, ff, "swiglu", cfg.use_bias)
+            for k in jax.random.split(ks[4], m.n_shared)
+        ]
+    return p
+
+
+def specs(cfg: ArchConfig):
+    m = cfg.moe
+    p = {
+        "router": {"w": ("embed", None)},
+        "w_gate": ("experts", "embed", "ff"),
+        "w_up": ("experts", "embed", "ff"),
+        "w_down": ("experts", "ff", "embed"),
+    }
+    if m.n_shared:
+        p["shared"] = [layers.mlp_specs("swiglu", cfg.use_bias)
+                       for _ in range(m.n_shared)]
+    return p
+
+
+def forward(p, cfg: ArchConfig, x, constrain=lambda t, name: t, mesh=None):
+    """x: [b, s, d] -> [b, s, d].
+
+    With a mesh, dispatch runs under shard_map (forward_sharded): tokens
+    stay on their data shard, each ``model`` shard routes into buffers for
+    its *local* experts only, and a single psum over ``model`` combines —
+    the collective cost of a Megatron FFN, with no GSPMD resharding of the
+    token axis. Without a mesh (single-device smoke tests) the global
+    scatter formulation below runs as-is.
+    """
+    if mesh is not None and "model" in mesh.axis_names:
+        return forward_sharded(p, cfg, x, mesh)
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    cap = _capacity(t, m)
+    xt = x.reshape(t, d)
+
+    # --- routing ---
+    logits = layers.dense(p["router"], xt, compute_dtype=jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, m.top_k)                       # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # --- position-in-expert via cumulative counts (capacity enforcement) ---
+    # top_k indices are distinct per token, so tok_e[t, e] is 0/1 and the
+    # within-token offset is always zero: position = # earlier (t', e) hits.
+    tok_e = jnp.zeros((t, m.n_experts), jnp.int32).at[
+        jnp.arange(t, dtype=jnp.int32)[:, None], top_i].add(1)          # [T, E]
+    cum = jnp.cumsum(tok_e, axis=0) - tok_e                             # excl. [T, E]
+    pos_tj = jnp.take_along_axis(cum, top_i, axis=1)                    # [T, k]
+    keep = pos_tj < cap
+
+    # --- dispatch: k scatters of [T, d] into [E, C, d] ---
+    buf = jnp.zeros((m.n_experts, cap, d), x.dtype)
+    for j in range(m.top_k):
+        e_j = top_i[:, j]
+        c_j = jnp.where(keep[:, j], pos_tj[:, j], cap)  # park dropped at C
+        buf = buf.at[e_j, c_j].set(xt, mode="drop")
+    buf = constrain(buf, "moe_buffer")
+
+    # --- expert GEMMs (batched over E) ---
+    cd = jnp.bfloat16
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf.astype(cd),
+                               p["w_gate"].astype(cd)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf.astype(cd), p["w_up"].astype(cd))
+    h = constrain(h, "moe_hidden")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cd))
+    out_buf = constrain(out_buf, "moe_buffer")
+
+    # --- combine: gather back and weight by router prob ---
+    yt = jnp.zeros((t, d), x.dtype)
+    for j in range(m.top_k):
+        e_j = top_i[:, j]
+        c_j = jnp.where(keep[:, j], pos_tj[:, j], 0)
+        gj = out_buf[e_j, c_j]                                          # [T, d]
+        w_j = (top_p[:, j] * keep[:, j]).astype(gj.dtype)
+        yt = yt + w_j[:, None] * gj
+
+    # --- shared experts (always-on fine-grained residual experts) ---
+    if m.n_shared:
+        for sp in p["shared"]:
+            yt = yt + layers.mlp(sp, xt, "swiglu")
+
+    return yt.reshape(b, s, d), _aux_metrics(tok_e, keep, cap)
+
+
+def _expert_ffn(buf, p_gate, p_up, p_down):
+    cd = jnp.bfloat16
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf.astype(cd), p_gate.astype(cd)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf.astype(cd), p_up.astype(cd))
+    return jnp.einsum("ecf,efd->ecd", h, p_down.astype(cd))
+
+
+def forward_sharded(p, cfg: ArchConfig, x, mesh):
+    """Expert-parallel MoE under shard_map (see forward() docstring)."""
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    b, s, d = x.shape
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_data = 1
+    for a in batch_axes:
+        n_data *= mesh.shape[a]
+    if b % n_data or m.n_experts % mesh.shape["model"]:
+        # fall back to the global formulation when shapes do not divide
+        return forward(p, cfg, x, mesh=None)
+    e_local = m.n_experts // mesh.shape["model"]
+    t_local = (b // n_data) * s
+    cap = _capacity(t_local, m)
+
+    def local_fn(x_blk, router_w, w_gate, w_up, w_down):
+        # x_blk: [b_l, s, d]; w_*: [E_local, ...]
+        b_l = x_blk.shape[0]
+        xt = x_blk.reshape(b_l * s, d)
+        logits = (xt.astype(jnp.float32)
+                  @ router_w.astype(jnp.float32))               # [T_l, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, m.top_k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+        e_off = jax.lax.axis_index("model") * e_local
+        tl = xt.shape[0]
+        # per-local-expert positions via cumulative counts
+        tok_e = jnp.zeros((tl, e_local), jnp.int32)
+        loc_i = top_i - e_off                                   # [T_l, k]
+        local = (loc_i >= 0) & (loc_i < e_local)
+        rows = jnp.broadcast_to(jnp.arange(tl, dtype=jnp.int32)[:, None],
+                                loc_i.shape)
+        tok_e = tok_e.at[rows, jnp.where(local, loc_i, 0)].add(
+            local.astype(jnp.int32))
+        cum = jnp.cumsum(tok_e, axis=0) - tok_e
+        buf = jnp.zeros((e_local, cap, d), x_blk.dtype)
+        pos_cache = []
+        for j in range(m.top_k):
+            lj = loc_i[:, j]
+            pj = jnp.take_along_axis(cum, jnp.clip(loc_i[:, j:j+1], 0, e_local - 1),
+                                     axis=1)[:, 0]
+            ok = local[:, j] & (pj < cap)
+            buf = buf.at[jnp.where(ok, lj, e_local),
+                         jnp.where(ok, pj, 0)].set(xt, mode="drop")
+            pos_cache.append((lj, pj, ok))
+
+        out_buf = _expert_ffn(buf, w_gate, w_up, w_down)
+
+        yt = jnp.zeros((tl, d), jnp.float32)
+        for j in range(m.top_k):
+            lj, pj, ok = pos_cache[j]
+            gj = out_buf[jnp.where(ok, lj, 0), jnp.where(ok, pj, 0)]
+            w_j = top_p[:, j] * ok
+            yt = yt + w_j[:, None] * gj.astype(jnp.float32)
+        yt = jax.lax.psum(yt.astype(jnp.bfloat16), "model")
+        return yt.astype(x_blk.dtype).reshape(b_l, s, d)
+
+    x_spec = P(batch_axes if len(batch_axes) > 1 else (batch_axes or (None,))[0],
+               None, None)
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(x_spec, P(), P("model"), P("model"), P("model")),
+        out_specs=x_spec,
+    )
+    yt = fn(x, p["router"]["w"], p["w_gate"], p["w_up"], p["w_down"])
+
+    if m.n_shared:
+        xt = x.reshape(b * s, d)
+        add = jnp.zeros_like(xt)
+        for sp in p["shared"]:
+            add = add + layers.mlp(sp, xt, "swiglu")
+        yt = yt + add.reshape(b, s, d).astype(yt.dtype)
+    return yt, {}
+
+
+def _aux_metrics(tok_e, keep, cap):
+    load = jnp.sum(tok_e, axis=0)
+    return {
+        "moe_drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+        "moe_max_load": jnp.max(load) / jnp.maximum(1, cap),
+    }
+
+
+def load_balance_loss(p, cfg: ArchConfig, x):
+    """Switch-style auxiliary load-balance loss (fraction * probability)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = layers.dense(p["router"], xt, compute_dtype=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_i = jax.lax.top_k(probs, m.top_k)[1]
+    hits = jnp.zeros((m.n_experts,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    frac = hits / (xt.shape[0] * m.top_k)
+    imp = jnp.mean(probs, axis=0)
+    return m.n_experts * jnp.sum(frac * imp)

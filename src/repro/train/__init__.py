@@ -1,0 +1,4 @@
+from . import steps
+from .steps import make_prefill_step, make_serve_step, make_train_step
+
+__all__ = ["steps", "make_prefill_step", "make_serve_step", "make_train_step"]

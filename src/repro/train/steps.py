@@ -1,0 +1,67 @@
+"""Train / prefill / serve step builders (the functions the dry-run lowers
+and the launchers execute)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..optim.adamw import AdamW, AdamWState
+from ..optim import compression
+
+
+def make_train_step(model: Model, opt: AdamW, *,
+                    compress: bool = False) -> Callable:
+    """(params, opt_state, batch[, err_state, key]) -> updated state + metrics."""
+
+    if not compress:
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            params, opt_state, om = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": loss, **metrics, **om}
+        return train_step
+
+    def train_step_c(params, opt_state, batch, err_state, key):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        grads, err_state = compression.compress_grads(grads, err_state, key)
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        return params, opt_state, err_state, {"loss": loss, **metrics, **om}
+    return train_step_c
+
+
+def make_prefill_step(model: Model) -> Callable:
+    """Forward over the prompt; returns last-position logits (next-token
+    distribution). Full-sequence logits are deliberately not materialized —
+    the lm_head matmul runs on the final position only."""
+
+    def prefill_step(params, batch):
+        cfg = model.cfg
+        x, positions = model._embed_inputs(params, batch)
+        x = model.constrain(x, "hidden")
+        from ..models import blocks, layers  # local to keep Model surface small
+        x, _ = blocks.stack_apply(
+            params["stack"], cfg, x, positions,
+            constrain=model.constrain, remat="none", mesh=model.mesh)
+        x = layers.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = layers.unembed(params["embed"], x)
+        else:
+            logits = layers.dense(params["lm_head"], x)
+        return logits[:, 0]
+
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """One batched decode step: (params, cache, tokens, pos) ->
+    (next-token logits, updated cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step

@@ -1,0 +1,100 @@
+"""Core engine correctness: every engine vs the numpy FSM oracle."""
+import numpy as np
+import pytest
+
+from repro.core import (ENGINES, count_all_occurrences_numpy, count_batch,
+                        count_fsm_numpy, count_fsm_scan, count_mapconcat,
+                        count_nonoverlapped, greedy_numpy, serial)
+from repro.core.episodes import Episode, episode_batch
+from repro.core.events import EventStream
+
+
+def random_stream(rng, n=300, n_types=5, rate=1.5):
+    times = np.cumsum(rng.exponential(1.0 / rate, size=n)).astype(np.float32)
+    types = rng.integers(0, n_types, size=n).astype(np.int32)
+    return EventStream(types, times, n_types)
+
+
+@pytest.fixture(scope="module")
+def cases():
+    rng = np.random.default_rng(42)
+    out = []
+    for _ in range(10):
+        s = random_stream(rng, n=int(rng.integers(60, 300)),
+                          n_types=int(rng.integers(2, 6)))
+        n = int(rng.integers(1, 5))
+        ep = serial(rng.integers(0, s.n_types, size=n).tolist(),
+                    float(rng.uniform(0, 1)), float(rng.uniform(1.5, 5)))
+        out.append((s, ep, count_fsm_numpy(s.types, s.times, ep)))
+    return out
+
+
+def test_oracles_agree(cases):
+    for s, ep, want in cases:
+        st, en = count_all_occurrences_numpy(s.types, s.times, ep)
+        assert greedy_numpy(st, en) == want
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_engine_matches_oracle(cases, engine):
+    for s, ep, want in cases:
+        res = count_nonoverlapped(s, ep, engine=engine,
+                                  cap_occ=24 * s.n_events, max_window=128)
+        assert not bool(res.overflow), f"overflow {ep}"
+        assert int(res.count) == want, f"{engine} {ep}"
+
+
+def test_parallel_scheduler_matches(cases):
+    for s, ep, want in cases:
+        res = count_nonoverlapped(s, ep, engine="dense", parallel_schedule=True)
+        assert int(res.count) == want
+
+
+def test_fsm_scan_matches(cases):
+    for s, ep, want in cases:
+        got = count_fsm_scan(s.types, s.times, ep, ring=16)[0]
+        assert int(got) == want
+
+
+def test_mapconcat_matches(cases):
+    for s, ep, want in cases:
+        got = count_mapconcat(s, ep, n_segments=4, ring=48,
+                              occ_per_segment=max(64, s.n_events))
+        assert int(got) == want
+
+
+def test_batch_counting():
+    rng = np.random.default_rng(0)
+    s = random_stream(rng, n=200, n_types=4)
+    eps = [serial(rng.integers(0, 4, size=3).tolist(), 0.2, 3.0)
+           for _ in range(7)]
+    sym, lo, hi = episode_batch(eps)
+    counts, _, overflow = count_batch(
+        s.types, s.times, sym, lo, hi, n_types=4, cap=s.n_events)
+    assert not bool(np.any(overflow))
+    for e, c in zip(eps, np.asarray(counts)):
+        assert int(c) == count_fsm_numpy(s.types, s.times, e)
+
+
+def test_overflow_flagged_not_silent():
+    rng = np.random.default_rng(1)
+    s = random_stream(rng, n=400, n_types=2, rate=5.0)
+    ep = serial([0, 0, 0], 0.0, 5.0)  # dense same-type: superset explodes
+    res = count_nonoverlapped(s, ep, engine="count_scan_write",
+                              cap_occ=s.n_events, max_window=4)
+    assert bool(res.overflow)
+
+
+def test_empty_and_single_event():
+    s = EventStream(np.asarray([1], np.int32), np.asarray([0.5], np.float32), 3)
+    ep = serial([1], 0, 1)
+    assert int(count_nonoverlapped(s, ep).count) == 1
+    ep2 = serial([0, 1], 0.1, 1.0)
+    assert int(count_nonoverlapped(s, ep2).count) == 0
+
+
+def test_episode_validation():
+    with pytest.raises(ValueError):
+        Episode((0, 1), (0.5,), (0.2,))   # high <= low
+    with pytest.raises(ValueError):
+        Episode((0, 1), (-1.0,), (2.0,))  # negative low

@@ -1,0 +1,86 @@
+"""Hypothesis property tests for the counting system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (count_fsm_numpy, count_nonoverlapped, serial)
+from repro.core.events import EventStream
+
+
+@st.composite
+def streams(draw, max_events=120, max_types=4):
+    n_types = draw(st.integers(2, max_types))
+    n = draw(st.integers(1, max_events))
+    gaps = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    times = np.cumsum(np.asarray(gaps, np.float32) * 0.25)
+    types = np.asarray(
+        draw(st.lists(st.integers(0, n_types - 1), min_size=n, max_size=n)),
+        np.int32)
+    return EventStream(types, times.astype(np.float32), n_types)
+
+
+@st.composite
+def episodes(draw, n_types=4):
+    n = draw(st.integers(1, 4))
+    syms = draw(st.lists(st.integers(0, n_types - 1), min_size=n, max_size=n))
+    lo = draw(st.floats(0.0, 1.0))
+    width = draw(st.floats(0.3, 4.0))
+    return serial(syms, lo, lo + width)
+
+
+@settings(max_examples=40, deadline=None)
+@given(streams(), episodes())
+def test_dense_matches_fsm_oracle(s, ep):
+    if max(ep.symbols) >= s.n_types:
+        ep = serial([x % s.n_types for x in ep.symbols],
+                    ep.t_low[0] if ep.t_low else 0,
+                    ep.t_high[0] if ep.t_high else 1)
+    want = count_fsm_numpy(s.types, s.times, ep)
+    got = count_nonoverlapped(s, ep, engine="dense")
+    assert int(got.count) == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(streams(), episodes())
+def test_count_bounded_by_min_symbol_count(s, ep):
+    """Non-overlapped count <= events of the rarest symbol in the episode."""
+    ep = serial([x % s.n_types for x in ep.symbols], 0.0, 2.0)
+    counts = np.bincount(np.asarray(s.types), minlength=s.n_types)
+    bound = min(counts[list(ep.symbols)])
+    got = int(count_nonoverlapped(s, ep, engine="dense").count)
+    assert got <= bound
+
+
+@settings(max_examples=25, deadline=None)
+@given(streams(), episodes(), st.floats(0.1, 10.0))
+def test_time_scale_invariance(s, ep, scale):
+    """Scaling all times and windows by the same factor preserves counts."""
+    ep = serial([x % s.n_types for x in ep.symbols], 0.25, 2.25)
+    base = int(count_nonoverlapped(s, ep, engine="dense").count)
+    s2 = EventStream(s.types, (np.asarray(s.times) * scale).astype(np.float32),
+                     s.n_types)
+    ep2 = serial(list(ep.symbols), 0.25 * scale, 2.25 * scale)
+    got = int(count_nonoverlapped(s2, ep2, engine="dense").count)
+    # float32 rounding at window boundaries can flip an inclusion; allow 1
+    assert abs(got - base) <= 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(streams())
+def test_anti_monotonicity(s):
+    """count(alpha) >= count(alpha extended by one symbol)."""
+    ep2 = serial([0, 1], 0.0, 2.0)
+    ep3 = serial([0, 1, 0], 0.0, 2.0)
+    c2 = int(count_nonoverlapped(s, ep2, engine="dense").count)
+    c3 = int(count_nonoverlapped(s, ep3, engine="dense").count)
+    assert c2 >= c3
+
+
+@settings(max_examples=20, deadline=None)
+@given(streams(), episodes())
+def test_engines_consistent(s, ep):
+    ep = serial([x % s.n_types for x in ep.symbols], 0.25, 2.0)
+    dense = count_nonoverlapped(s, ep, engine="dense")
+    csw = count_nonoverlapped(s, ep, engine="count_scan_write",
+                              cap_occ=32 * max(s.n_events, 4), max_window=128)
+    if not bool(csw.overflow):
+        assert int(dense.count) == int(csw.count)
