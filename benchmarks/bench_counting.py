@@ -5,13 +5,23 @@ counting a batch of episodes over datasets 1-8 (time-scaled; relative
 curves match the paper).
 Fig 10: single-episode counting, serial FSM vs the redesigned algorithm.
 
-On this CPU container the "GPU" engines run as XLA:CPU programs; the
-quantity of interest is the *relative* scaling across dataset sizes and
-methods — the shape of the paper's curves — plus the absolute numbers on
-real TPU hardware via the same harness.
+Also runs the engine head-to-head sweep (dense vs dense_pallas vs
+count_scan_write across episode lengths and stream sizes) and persists it
+to ``BENCH_counting.json`` so successive PRs accumulate a perf trajectory
+for the production counting path.
+
+On this CPU container the "GPU" engines run as XLA:CPU programs (the
+Pallas engine in interpret mode); the quantity of interest is the
+*relative* scaling across dataset sizes and methods — the shape of the
+paper's curves — plus the absolute numbers on real TPU hardware via the
+same harness.
 """
 from __future__ import annotations
 
+import json
+import pathlib
+
+import jax
 import numpy as np
 
 from repro.core import (count_batch, count_mapconcat, count_fsm_numpy,
@@ -24,8 +34,55 @@ from .common import emit, time_fn
 SCALE = 0.01          # time-scale of the paper's datasets (CPU budget)
 DATASETS = (4, 5, 6, 7, 8)   # larger sets dominate runtime; keep the sweep
 
+# engine head-to-head sweep (BENCH_counting.json)
+SWEEP_ENGINES = ("dense", "dense_pallas", "count_scan_write")
+SWEEP_EPISODE_LENGTHS = (3, 4, 5)
+SWEEP_STREAM_SIZES = (1024, 4096)
+SWEEP_BATCH = 8
+JSON_PATH = pathlib.Path("BENCH_counting.json")
+
+
+def _sweep_stream(n_events: int, n_types: int = 8):
+    rng = np.random.default_rng(n_events)
+    times = np.cumsum(rng.exponential(0.5, n_events)).astype(np.float32)
+    types = rng.integers(0, n_types, n_events).astype(np.int32)
+    return types, times, n_types
+
+
+def run_engine_sweep() -> None:
+    """Engines head-to-head; emits CSV lines + BENCH_counting.json."""
+    entries = []
+    for n_events in SWEEP_STREAM_SIZES:
+        types, times, n_types = _sweep_stream(n_events)
+        for ep_len in SWEEP_EPISODE_LENGTHS:
+            rng = np.random.default_rng(ep_len)
+            eps = [serial(rng.integers(0, n_types, ep_len).tolist(), 0.1, 2.0)
+                   for _ in range(SWEEP_BATCH)]
+            sym, lo, hi = episode_batch(eps)
+            for engine in SWEEP_ENGINES:
+                kw = dict(n_types=n_types, cap=n_events, engine=engine)
+                if engine == "count_scan_write":
+                    kw.update(cap_occ=4 * n_events, max_window=64)
+                us = time_fn(
+                    lambda kw=kw: count_batch(types, times, sym, lo, hi, **kw),
+                    warmup=1, iters=2)
+                name = f"sweep_n{n_events}_len{ep_len}_{engine}"
+                emit(name, us, f"batch={SWEEP_BATCH}")
+                entries.append({
+                    "engine": engine,
+                    "episode_len": ep_len,
+                    "n_events": n_events,
+                    "batch": SWEEP_BATCH,
+                    "us_per_call": round(us, 1),
+                })
+    JSON_PATH.write_text(json.dumps(
+        {"backend": jax.default_backend(), "suite": "counting_engine_sweep",
+         "entries": entries}, indent=2) + "\n")
+    emit("sweep_json_written", 0.0, str(JSON_PATH))
+
 
 def run() -> None:
+    run_engine_sweep()
     cfg = NetworkConfig()
     eps = embedded_episodes(cfg)
     # 30-episode batch (paper counts 30 episodes): sub-episodes of embedded

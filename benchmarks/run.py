@@ -8,13 +8,14 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: counting,episode_length,frequency,"
-                         "instruction_mix,distributed")
+                    help="comma list: counting,mining,episode_length,"
+                         "frequency,instruction_mix,distributed")
     args = ap.parse_args()
     from . import (bench_counting, bench_distributed, bench_episode_length,
-                   bench_frequency, bench_instruction_mix)
+                   bench_frequency, bench_instruction_mix, bench_mining)
     suites = {
-        "counting": bench_counting.run,            # paper Figs 9-10
+        "counting": bench_counting.run,            # paper Figs 9-10 + engine sweep
+        "mining": bench_mining.run,                # device-resident miner e2e
         "episode_length": bench_episode_length.run,  # paper Fig 11
         "frequency": bench_frequency.run,          # paper Fig 12
         "instruction_mix": bench_instruction_mix.run,  # paper Table III

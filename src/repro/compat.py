@@ -1,0 +1,40 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+Keeps the rest of the codebase on one spelling regardless of the installed
+jax: ``shard_map`` graduated from ``jax.experimental.shard_map`` to
+``jax.shard_map``, and mesh ``axis_types`` only exist on newer versions
+(see launch/mesh.py for the latter).
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # older jax (< 0.6)
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+
+def pcast_varying(x, axes):
+    """Mark ``x`` as varying over manual ``axes`` inside shard_map.
+
+    Newer jax enforces varying-manual-axes typing on scan carries and
+    provides ``lax.pcast`` to coerce; older versions have neither the check
+    nor the primitive, so this is an identity there.
+    """
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None:
+        return x
+    return pcast(x, axes, to="varying")
+
+
+def axis_size(axis_name):
+    """Size of a mapped mesh axis; ``lax.axis_size`` on newer jax, the
+    psum-of-ones identity on older versions."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+__all__ = ["shard_map", "pcast_varying", "axis_size"]

@@ -1,20 +1,36 @@
 # The paper's primary contribution: non-overlapped counting of serial
 # episodes with inter-event constraints, transformed for accelerator
 # (TPU/XLA) execution. See DESIGN.md for the GPU->TPU mapping.
-from .episodes import Episode, serial, episode_batch
+from .episodes import Episode, serial, episode_batch, episodes_from_rows
 from .events import EventStream, from_arrays, type_index, episode_symbol_times
-from .counting import CountResult, count_batch, count_nonoverlapped, count_occurrences, ENGINES
-from .mining import MinerConfig, LevelResult, mine, generate_candidates
+from .counting import (CountResult, count_batch, count_batch_indexed,
+                       count_nonoverlapped, count_occurrences)
+from .mining import (MinerConfig, LevelResult, LevelArrays, mine, mine_arrays,
+                     generate_candidates, generate_candidates_arrays)
+from .tracking import (TrackingEngine, EngineConfig, register_engine,
+                       get_engine, engine_names)
 from .statemachine import count_fsm_numpy, count_fsm_scan, greedy_numpy, count_all_occurrences_numpy
 from .mapconcat import count_mapconcat
 from .distributed import count_sharded, shard_stream
 from . import compaction, scheduling, tracking, telemetry
 
+
+def __getattr__(name):
+    # live registry view (see counting.__getattr__): engines registered at
+    # runtime appear in repro.core.ENGINES without re-import
+    if name == "ENGINES":
+        return tracking.engine_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 __all__ = [
-    "Episode", "serial", "episode_batch",
+    "Episode", "serial", "episode_batch", "episodes_from_rows",
     "EventStream", "from_arrays", "type_index", "episode_symbol_times",
-    "CountResult", "count_batch", "count_nonoverlapped", "count_occurrences", "ENGINES",
-    "MinerConfig", "LevelResult", "mine", "generate_candidates",
+    "CountResult", "count_batch", "count_batch_indexed", "count_nonoverlapped",
+    "count_occurrences", "ENGINES",
+    "MinerConfig", "LevelResult", "LevelArrays", "mine", "mine_arrays",
+    "generate_candidates", "generate_candidates_arrays",
+    "TrackingEngine", "EngineConfig", "register_engine", "get_engine",
+    "engine_names",
     "count_fsm_numpy", "count_fsm_scan", "greedy_numpy", "count_all_occurrences_numpy",
     "count_mapconcat", "count_sharded", "shard_stream",
     "compaction", "scheduling", "tracking", "telemetry",

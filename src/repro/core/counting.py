@@ -1,9 +1,13 @@
 """Non-overlapped episode counting — the paper's redesigned algorithm (§IV).
 
 ``count_nonoverlapped`` = parallel local tracking (subproblem 1) + greedy
-overlap resolution (subproblem 2). Engines:
+overlap resolution (subproblem 2). Tracking is dispatched through the
+engine registry in tracking.py:
 
   engine="dense"                  beyond-paper optimized path (see tracking.py)
+  engine="dense_pallas"           dense tracking with each level executed by
+                                  the Pallas TPU kernel (kernels/episode_track)
+                                  via kernels/ops.py; interpret mode off-TPU
   engine="count_scan_write"       paper's preferred lock-free pipeline:
                                   backward tracking + count/scan/write
                                   compaction; output auto-sorted by end time
@@ -15,7 +19,9 @@ overlap resolution (subproblem 2). Engines:
 
 All engines return identical counts (property-tested against the numpy FSM
 oracle) and differ only in cost profile, mirroring the paper's Fig 11/12
-method comparison.
+method comparison. Kernel tiling knobs (``block_next``, ``block_prev``,
+``window_tiles``, ``interpret``) thread from every public entry point down
+to the engine; non-Pallas engines ignore them.
 """
 from __future__ import annotations
 
@@ -30,7 +36,12 @@ from . import events as events_lib
 from . import scheduling, tracking
 from .episodes import Episode
 
-ENGINES = ("dense", "count_scan_write", "atomic_sort", "flags")
+def __getattr__(name: str):
+    # ENGINES is a live view of the registry so engines added through
+    # tracking.register_engine show up without re-importing (PEP 562).
+    if name == "ENGINES":
+        return tracking.engine_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -49,31 +60,17 @@ def count_occurrences(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
 ) -> CountResult:
     """Count on pre-gathered per-symbol time tables (jit/vmap-friendly core)."""
-    if engine not in ENGINES:
-        raise ValueError(f"engine must be one of {ENGINES}")
-    cap = times_by_sym.shape[1]
-    cap_occ = cap_occ or cap
-
-    if engine == "dense":
-        occ = tracking.track_dense(times_by_sym, t_low, t_high)
-    elif engine == "count_scan_write":
-        occ = tracking.track_faithful(
-            times_by_sym, t_low, t_high, cap_occ=cap_occ,
-            max_window=max_window, method="count_scan_write",
-            direction="backward")
-    elif engine == "atomic_sort":
-        occ = tracking.track_faithful(
-            times_by_sym, t_low, t_high, cap_occ=cap_occ,
-            max_window=max_window, method="count_scan_write",
-            direction="forward")
-        occ = tracking.sort_by_end(occ)
-    else:  # flags
-        occ = tracking.track_faithful(
-            times_by_sym, t_low, t_high, cap_occ=cap_occ,
-            max_window=max_window, method="flags", direction="backward")
-
+    eng = tracking.get_engine(engine)
+    cfg = tracking.EngineConfig(
+        cap_occ=cap_occ, max_window=max_window, block_next=block_next,
+        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)
+    occ = eng.track(times_by_sym, t_low, t_high, cfg)
     count = scheduling.greedy_count(occ, parallel=parallel_schedule)
     return CountResult(count=count, n_superset=occ.n_superset, overflow=occ.overflow)
 
@@ -87,6 +84,10 @@ def count_nonoverlapped(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
 ) -> CountResult:
     """End-to-end count for one episode on one stream (public API)."""
     cap = cap or max(1, stream.n_events)
@@ -96,15 +97,60 @@ def count_nonoverlapped(
     times_by_sym, _ = events_lib.episode_symbol_times(table, counts, sym)
     res = count_occurrences(
         times_by_sym, lo, hi, engine=engine, cap_occ=cap_occ,
-        max_window=max_window, parallel_schedule=parallel_schedule)
+        max_window=max_window, parallel_schedule=parallel_schedule,
+        block_next=block_next, block_prev=block_prev,
+        window_tiles=window_tiles, interpret=interpret)
     per_type_overflow = jnp.any(counts > cap)
     return CountResult(res.count, res.n_superset, res.overflow | per_type_overflow)
 
 
 @functools.partial(
     jax.jit,
+    static_argnames=("engine", "cap_occ", "max_window", "parallel_schedule",
+                     "block_next", "block_prev", "window_tiles", "interpret"),
+)
+def count_batch_indexed(
+    table: jax.Array,       # f32[n_types, cap] per-type time index
+    counts: jax.Array,      # i32[n_types] true per-type totals (pre-clip)
+    symbols: jax.Array,     # i32[B, N]
+    t_low: jax.Array,       # f32[B, N-1]
+    t_high: jax.Array,      # f32[B, N-1]
+    *,
+    engine: str = "dense",
+    cap_occ: Optional[int] = None,
+    max_window: int = 32,
+    parallel_schedule: bool = False,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Count a batch of same-length episodes on a *pre-built* type index.
+
+    The miner builds the index once per stream and calls this for every
+    level — the paper's pre-processing amortization extended across the
+    whole level-wise search. Returns (counts[B], n_superset[B], overflow[B]).
+    """
+    cap = table.shape[1]
+    index_overflow = jnp.any(counts > cap)
+
+    def one(sym, lo, hi):
+        tbs = table[sym]
+        r = count_occurrences(
+            tbs, lo, hi, engine=engine, cap_occ=cap_occ,
+            max_window=max_window, parallel_schedule=parallel_schedule,
+            block_next=block_next, block_prev=block_prev,
+            window_tiles=window_tiles, interpret=interpret)
+        return r.count, r.n_superset, r.overflow | index_overflow
+
+    return jax.vmap(one)(symbols, t_low, t_high)
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("n_types", "cap", "engine", "cap_occ", "max_window",
-                     "parallel_schedule"),
+                     "parallel_schedule", "block_next", "block_prev",
+                     "window_tiles", "interpret"),
 )
 def count_batch(
     types: jax.Array,
@@ -119,20 +165,19 @@ def count_batch(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Count a batch of same-length episodes over one stream (vmapped).
 
-    The per-type index is built once and shared across the batch — the
-    paper's pre-processing amortization. Returns (counts[B], n_superset[B],
-    overflow[B]).
+    Builds the per-type index then defers to :func:`count_batch_indexed`;
+    jitted end-to-end so the index build fuses with the counting pass.
     """
     table, counts = events_lib.type_index(types, times, n_types, cap)
-
-    def one(sym, lo, hi):
-        tbs = table[sym]
-        r = count_occurrences(
-            tbs, lo, hi, engine=engine, cap_occ=cap_occ,
-            max_window=max_window, parallel_schedule=parallel_schedule)
-        return r.count, r.n_superset, r.overflow | jnp.any(counts > cap)
-
-    return jax.vmap(one)(symbols, t_low, t_high)
+    return count_batch_indexed(
+        table, counts, symbols, t_low, t_high, engine=engine,
+        cap_occ=cap_occ, max_window=max_window,
+        parallel_schedule=parallel_schedule, block_next=block_next,
+        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)

@@ -31,6 +31,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from . import events as events_lib
 from . import scheduling, tracking
 from .episodes import Episode
+from .. import compat
+from ..compat import shard_map
 
 
 def shard_stream(types, times, n_shards: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -79,7 +81,7 @@ def count_sharded(
         ty = ty_blk[0]      # [n_local]
         tm = tm_blk[0]
         idx = lax.axis_index(axis)
-        n_sh = lax.axis_size(axis)
+        n_sh = compat.axis_size(axis)
 
         # halo exchange: my first `halo` events go to my LEFT neighbor, i.e.
         # each shard receives the right neighbor's head block
@@ -127,7 +129,7 @@ def count_sharded(
         return count[None], halo_short[None]
 
     in_spec = P(axis, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(in_spec, in_spec),
         out_specs=(P(axis), P(axis)),

@@ -70,6 +70,22 @@ def serial(symbols: Sequence[int], low: float, high: float) -> Episode:
     return Episode(tuple(symbols), (low,) * (n - 1), (high,) * (n - 1))
 
 
+def episodes_from_rows(
+    rows, t_low: float, t_high: float
+) -> "list[Episode]":
+    """Inverse of :func:`episode_batch` for uniform windows.
+
+    ``rows`` is i32[B, N] symbol rows (the miner's array form); every gap
+    gets the shared (t_low, t_high] window. N == 1 rows get no windows.
+    """
+    rows = np.asarray(rows, np.int64)
+    if rows.ndim != 2:
+        raise ValueError("rows must be [B, N]")
+    n = rows.shape[1]
+    lo, hi = (t_low,) * (n - 1), (t_high,) * (n - 1)
+    return [Episode(tuple(int(s) for s in row), lo, hi) for row in rows]
+
+
 def episode_batch(episodes: Sequence[Episode]):
     """Pack same-length episodes into dense arrays for vmap counting.
 

@@ -7,21 +7,36 @@ beta[:-1]); their non-overlapped counts are obtained in one batched
 and candidates below the frequency threshold are pruned (anti-monotonicity
 of the non-overlapped count under sub-episodes guarantees completeness).
 
+Device-resident design (DESIGN.md §5): the search loop never materializes
+Python episode objects. Candidates live as padded ``i32[B, N]`` symbol
+arrays (windows are uniform per MinerConfig, so ``f32[B, N-1]`` windows are
+broadcast fills), the suffix/prefix join is a vectorized group-by over
+symbol rows (:func:`generate_candidates_arrays`), the per-type event index
+is built **once per stream** and reused by every level through
+``counting.count_batch_indexed``, and threshold pruning is computed on
+device — each level pays exactly one host sync, fetching (counts, keep
+mask, overflow) in a single transfer. The classic Episode-list API
+(:func:`mine`, :func:`generate_candidates`) remains as a thin wrapper and
+as the join's reference implementation.
+
 The paper's focus is the *later* levels, where few-but-long episodes leave
 a one-thread-per-episode scheme under-utilized; here every level uses the
-data-parallel counting engines of counting.py, so parallelism is over
-(episodes x events) regardless of level.
+data-parallel counting engines of counting.py (including the Pallas-kernel
+``dense_pallas`` engine), so parallelism is over (episodes x events)
+regardless of level.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import counting
-from .episodes import Episode, episode_batch
+from . import events as events_lib
+from .episodes import Episode, episode_batch, episodes_from_rows
 from .events import EventStream
 
 MAX_BATCH_PAD = 16  # pad candidate batches to multiples of this to limit recompiles
@@ -34,11 +49,15 @@ class MinerConfig:
     threshold: int               # minimum non-overlapped count
     level_thresholds: Optional[Dict[int, int]] = None  # per-level override
     max_level: int = 4
-    engine: str = "dense"
+    engine: str = "dense"        # any registered tracking engine (tracking.py)
     cap: Optional[int] = None    # per-type event capacity (default: n_events)
     cap_occ: Optional[int] = None
     max_window: int = 32
     max_candidates: int = 4096   # safety valve per level
+    block_next: int = 256        # Pallas tile shape (dense_pallas engine)
+    block_prev: int = 256
+    window_tiles: int = 0        # 0 = exact full-window coverage
+    interpret: Optional[bool] = None  # None = interpret off-TPU
 
 
 @dataclasses.dataclass
@@ -48,6 +67,15 @@ class LevelResult:
     n_candidates: int
 
 
+@dataclasses.dataclass
+class LevelArrays:
+    """Array-form per-level result: surviving episodes as symbol rows."""
+
+    symbols: np.ndarray     # i32[F, N] surviving (frequent) episodes
+    counts: np.ndarray      # i32[F] their non-overlapped counts
+    n_candidates: int       # candidates generated at this level (pre-prune)
+
+
 def _pad_to(n: int) -> int:
     return max(MAX_BATCH_PAD, ((n + MAX_BATCH_PAD - 1) // MAX_BATCH_PAD) * MAX_BATCH_PAD)
 
@@ -55,7 +83,11 @@ def _pad_to(n: int) -> int:
 def generate_candidates(
     frequent: Sequence[Episode], level: int, cfg: MinerConfig
 ) -> List[Episode]:
-    """Suffix/prefix join of frequent (level-1)-node episodes."""
+    """Suffix/prefix join of frequent (level-1)-node episodes (list form).
+
+    Reference implementation; :func:`generate_candidates_arrays` is the
+    vectorized twin used by the miner and must match it element-for-element.
+    """
     if level == 2:
         types = sorted({e.symbols[0] for e in frequent})
         return [
@@ -81,6 +113,50 @@ def generate_candidates(
     return out
 
 
+def generate_candidates_arrays(
+    frequent: np.ndarray, level: int, cfg: MinerConfig
+) -> np.ndarray:
+    """Vectorized suffix/prefix join over symbol rows.
+
+    Args:
+      frequent: i32[F, level-1] symbol rows of the frequent episodes from
+        the previous level, in discovery order.
+
+    Returns i32[B, level] candidate rows in exactly the order of
+    :func:`generate_candidates` (property-tested), truncated to
+    ``cfg.max_candidates``.
+    """
+    f = np.asarray(frequent, np.int32).reshape(-1, max(level - 1, 1))
+    if f.shape[0] == 0:
+        return np.zeros((0, level), np.int32)
+    if level == 2:
+        types = np.unique(f[:, 0])            # ascending, deduped
+        a = np.repeat(types, types.size)      # a-major, b-minor nesting
+        b = np.tile(types, types.size)
+        return np.stack([a, b], axis=1).astype(np.int32)[: cfg.max_candidates]
+    prefix, suffix = f[:, :-1], f[:, 1:]
+    nf = f.shape[0]
+    # Dense ids for (N-2)-symbol rows so the join is integer searchsorted.
+    _, inv = np.unique(
+        np.concatenate([prefix, suffix], axis=0), axis=0, return_inverse=True)
+    pref_id, suf_id = inv[:nf], inv[nf:]
+    # Betas grouped by prefix id; stable sort keeps discovery order in-group
+    # (matches the dict-of-lists insertion order of the reference join).
+    order = np.argsort(pref_id, kind="stable")
+    lo = np.searchsorted(pref_id[order], suf_id, side="left")
+    hi = np.searchsorted(pref_id[order], suf_id, side="right")
+    reps = hi - lo                            # betas joined per alpha
+    total = int(reps.sum())
+    if total == 0:
+        return np.zeros((0, level), np.int32)
+    alpha_rows = np.repeat(np.arange(nf), reps)
+    group_start = np.cumsum(reps) - reps
+    within = np.arange(total) - np.repeat(group_start, reps)
+    beta_rows = order[np.repeat(lo, reps) + within]
+    out = np.concatenate([f[alpha_rows], f[beta_rows, -1:]], axis=1)
+    return out.astype(np.int32)[: cfg.max_candidates]
+
+
 def count_candidates(
     stream: EventStream, candidates: Sequence[Episode], cfg: MinerConfig
 ) -> np.ndarray:
@@ -95,40 +171,82 @@ def count_candidates(
     counts, _, overflow = counting.count_batch(
         stream.types, stream.times, sym, lo, hi,
         n_types=stream.n_types, cap=cap, engine=cfg.engine,
-        cap_occ=cfg.cap_occ, max_window=cfg.max_window)
+        cap_occ=cfg.cap_occ, max_window=cfg.max_window,
+        block_next=cfg.block_next, block_prev=cfg.block_prev,
+        window_tiles=cfg.window_tiles, interpret=cfg.interpret)
     counts = np.asarray(counts)[:b]
     if bool(np.any(np.asarray(overflow)[:b])):
         raise RuntimeError(
-            "episode counting overflowed static capacity; raise cap/cap_occ/max_window")
+            "episode counting overflowed static capacity or truncated a "
+            "constraint window; raise cap/cap_occ/max_window/window_tiles")
     return counts
 
 
-def mine(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelResult]:
-    """Run level-wise mining up to cfg.max_level. Returns per-level results."""
-    results: Dict[int, LevelResult] = {}
+def mine_arrays(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelArrays]:
+    """Device-resident level-wise mining; returns per-level symbol arrays.
 
-    # level 1: single-type episodes; count = per-type non-overlapped count
-    types = np.asarray(stream.types)
-    level1_eps, level1_counts = [], []
-    binc = np.bincount(types, minlength=stream.n_types)
-    for t in range(stream.n_types):
-        if binc[t] >= cfg.threshold:
-            level1_eps.append(Episode((t,)))
-            level1_counts.append(int(binc[t]))
-    results[1] = LevelResult(level1_eps, level1_counts, stream.n_types)
+    The per-type index is built once; each level runs candidate counting +
+    threshold pruning on device and syncs exactly once (counts, keep mask,
+    overflow in a single ``device_get``). The candidate join runs on host
+    over compact int32 arrays — it is O(B) numpy work between device
+    launches, never per-episode Python.
+    """
+    cap = cfg.cap or max(1, stream.n_events)
+    table, type_counts = events_lib.type_index(
+        stream.types, stream.times, stream.n_types, cap)   # built ONCE
 
-    frequent = level1_eps
+    results: Dict[int, LevelArrays] = {}
+
+    # level 1: single-type episodes; count = per-type event count
+    binc = np.asarray(type_counts)                          # level-1 host sync
+    freq_types = np.nonzero(binc >= cfg.threshold)[0].astype(np.int32)
+    frequent = freq_types[:, None]                          # i32[F, 1]
+    results[1] = LevelArrays(frequent, binc[freq_types], stream.n_types)
+
     for level in range(2, cfg.max_level + 1):
-        if not frequent:
+        if frequent.shape[0] == 0:
             break
-        cands = generate_candidates(frequent, level, cfg)
-        if not cands:
-            results[level] = LevelResult([], [], 0)
+        cands = generate_candidates_arrays(frequent, level, cfg)
+        b = cands.shape[0]
+        if b == 0:
+            results[level] = LevelArrays(
+                np.zeros((0, level), np.int32), np.zeros((0,), np.int32), 0)
             break
-        counts = count_candidates(stream, cands, cfg)
+        bp = _pad_to(b)
+        sym = np.concatenate([cands, np.broadcast_to(cands[:1], (bp - b, level))])
+        lo = jnp.full((bp, level - 1), cfg.t_low, jnp.float32)
+        hi = jnp.full((bp, level - 1), cfg.t_high, jnp.float32)
         thr = (cfg.level_thresholds or {}).get(level, cfg.threshold)
-        keep = [(e, int(c)) for e, c in zip(cands, counts) if c >= thr]
-        results[level] = LevelResult(
-            [e for e, _ in keep], [c for _, c in keep], len(cands))
-        frequent = [e for e, _ in keep]
+        counts_dev, _, overflow = counting.count_batch_indexed(
+            table, type_counts, jnp.asarray(sym), lo, hi,
+            engine=cfg.engine, cap_occ=cfg.cap_occ, max_window=cfg.max_window,
+            block_next=cfg.block_next, block_prev=cfg.block_prev,
+            window_tiles=cfg.window_tiles, interpret=cfg.interpret)
+        keep_dev = counts_dev >= jnp.int32(thr)             # pruned on device
+        counts_h, keep_h, ovf_h = jax.device_get(           # ONE sync per level
+            (counts_dev[:b], keep_dev[:b], overflow[:b]))
+        if bool(np.any(ovf_h)):
+            raise RuntimeError(
+                "episode counting overflowed static capacity or truncated a "
+                "constraint window; raise cap/cap_occ/max_window/window_tiles")
+        frequent = cands[keep_h]
+        results[level] = LevelArrays(
+            frequent, np.asarray(counts_h)[keep_h].astype(np.int32), b)
     return results
+
+
+def mine(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelResult]:
+    """Run level-wise mining up to cfg.max_level. Returns per-level results.
+
+    Thin Episode-list wrapper over :func:`mine_arrays` (same search, same
+    order, same counts).
+    """
+    return {
+        level: LevelResult(
+            episodes_from_rows(la.symbols, cfg.t_low, cfg.t_high) if level > 1
+            else [Episode((int(t),)) for t in la.symbols[:, 0]],
+            [int(c) for c in la.counts],
+            la.n_candidates,
+        )
+        for level, la in mine_arrays(stream, cfg).items()
+    }

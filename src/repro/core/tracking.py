@@ -25,11 +25,19 @@ full data parallelism. Two engines:
 
 All functions are static-shaped: event tables are ``+inf``-padded, value
 (latest-start) tables are ``-inf``-padded.
+
+Engines are exposed through a registry (see :class:`TrackingEngine` and
+:func:`register_engine` at the bottom of this module): ``counting.py``
+dispatches by name, so adding an engine is one ``register_engine`` call —
+no if/elif ladder to extend. The ``dense_pallas`` engine drives the Pallas
+TPU kernel (``kernels/episode_track.py``) through ``kernels/ops.py``,
+falling back to interpret mode off-TPU (DESIGN.md §4).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -226,3 +234,177 @@ def sort_by_end(occ: Occurrences) -> Occurrences:
         n_superset=occ.n_superset,
         overflow=occ.overflow,
     )
+
+
+# ---------------------------------------------------------------------------
+# Engine registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Per-call knobs threaded from the counting API down to the engines.
+
+    ``cap_occ``/``max_window`` size the faithful engines' static occurrence
+    buffers; ``block_next``/``block_prev``/``window_tiles`` are the Pallas
+    kernel's tile shape and grid-pruning bound; ``interpret=None`` lets the
+    kernel layer decide (interpret mode anywhere but TPU).
+    """
+
+    cap_occ: Optional[int] = None
+    max_window: int = 32
+    block_next: int = 256
+    block_prev: int = 256
+    window_tiles: int = 0
+    interpret: Optional[bool] = None
+
+
+class TrackingEngine(Protocol):
+    """One per-level windowed tracking strategy + compaction scheme.
+
+    ``track`` must be jit/vmap-traceable: static shapes in, static shapes
+    out, with the Occurrences padding convention (+inf ends, -inf starts).
+    """
+
+    name: str
+
+    def track(
+        self,
+        times_by_sym: jax.Array,   # f32[N, cap] sorted rows, +inf padded
+        t_low: jax.Array,          # f32[N-1]
+        t_high: jax.Array,         # f32[N-1]
+        cfg: EngineConfig,
+    ) -> Occurrences:
+        ...
+
+
+_REGISTRY: Dict[str, TrackingEngine] = {}
+
+
+def register_engine(engine: TrackingEngine, *, overwrite: bool = False) -> TrackingEngine:
+    if engine.name in _REGISTRY and not overwrite:
+        raise ValueError(f"engine {engine.name!r} already registered")
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> TrackingEngine:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"engine must be one of {engine_names()}, got {name!r}") from None
+
+
+def engine_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseEngine:
+    """Beyond-paper windowed range-max tracking (no compaction at all)."""
+
+    name: str = "dense"
+
+    def track(self, times_by_sym, t_low, t_high, cfg: EngineConfig) -> Occurrences:
+        return track_dense(times_by_sym, t_low, t_high)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaithfulEngine:
+    """Paper Algorithm 2 tracking with a pluggable compaction strategy."""
+
+    name: str
+    method: str = "count_scan_write"
+    direction: str = "backward"
+    sort_output: bool = False   # AtomicCompact profile: forward + final sort
+
+    def track(self, times_by_sym, t_low, t_high, cfg: EngineConfig) -> Occurrences:
+        cap = times_by_sym.shape[1]
+        occ = track_faithful(
+            times_by_sym, t_low, t_high,
+            cap_occ=cfg.cap_occ or cap, max_window=cfg.max_window,
+            method=self.method, direction=self.direction)
+        return sort_by_end(occ) if self.sort_output else occ
+
+
+@dataclasses.dataclass(frozen=True)
+class DensePallasEngine:
+    """Dense tracking with each level executed by the Pallas TPU kernel.
+
+    Same dominance argument (and therefore the same counts) as ``dense``,
+    but the windowed range-max runs as tiled broadcast-compare + row-max in
+    VMEM (kernels/episode_track.py). The level arrays are padded up to a
+    common multiple of the tile sizes — max-accumulation over +inf/-inf
+    padding is a no-op, so this is harmless — and sliced back afterwards.
+
+    ``window_tiles > 0`` caps how many prev tiles each next tile scans; a
+    too-small cap would truncate constraint windows, so any level where a
+    next tile's window may not fit is reported through ``overflow`` (the
+    same convention as the faithful engines' capacity misses — flagged,
+    never silently wrong). ``window_tiles=0`` is always exact.
+    """
+
+    name: str = "dense_pallas"
+
+    def track(self, times_by_sym, t_low, t_high, cfg: EngineConfig) -> Occurrences:
+        from ..kernels import ops  # deferred: core stays importable sans pallas
+
+        n, cap = times_by_sym.shape
+        bn = max(8, min(cfg.block_next, 256))
+        bp = max(8, min(cfg.block_prev, 256))
+        tile = math.lcm(bn, bp)
+        pcap = ((cap + tile - 1) // tile) * tile
+        bn = min(bn, pcap)
+        bp = min(bp, pcap)
+
+        def pad_t(row):
+            return jnp.concatenate(
+                [row, jnp.full((pcap - cap,), jnp.inf, row.dtype)])
+
+        def window_truncated(t_prev, t_next, hi):
+            """Conservative (traceable) twin of ops.required_window_tiles:
+            flags any next tile whose window span may exceed the scan cap."""
+            nt = pcap // bn
+            finite_next = jnp.where(jnp.isfinite(t_next), t_next, NEG)
+            tile_min = t_next.reshape(nt, bn)[:, 0]
+            tile_max = finite_next.reshape(nt, bn).max(axis=1)
+            lo_i = jnp.searchsorted(t_prev, tile_min - hi, side="left")
+            hi_i = jnp.searchsorted(t_prev, tile_max, side="left")
+            span = jnp.clip(hi_i - lo_i, 0, pcap)
+            return jnp.any(span // bp + 2 > cfg.window_tiles)
+
+        t0 = times_by_sym[0]
+        v = jnp.where(jnp.isfinite(t0), t0, NEG)
+        n_superset = jnp.sum(jnp.isfinite(t0)).astype(jnp.int32)
+        overflow = jnp.bool_(False)
+        v = jnp.concatenate([v, jnp.full((pcap - cap,), NEG, v.dtype)])
+        t_prev = pad_t(t0)
+        for i in range(n - 1):
+            t_next = pad_t(times_by_sym[i + 1])
+            if cfg.window_tiles > 0 and cfg.window_tiles < pcap // bp:
+                overflow = overflow | window_truncated(t_prev, t_next, t_high[i])
+            v = ops.track_level(
+                t_prev, v, t_next, t_low[i], t_high[i],
+                block_next=bn, block_prev=bp,
+                window_tiles=cfg.window_tiles, interpret=cfg.interpret)
+            v = jnp.where(jnp.isfinite(t_next), v, NEG)
+            n_superset = n_superset + jnp.sum(v > NEG).astype(jnp.int32)
+            t_prev = t_next
+        v = v[:cap]
+        ends = times_by_sym[n - 1]
+        valid = (v > NEG) & jnp.isfinite(ends)
+        return Occurrences(
+            starts=v,
+            ends=jnp.where(valid, ends, jnp.inf),
+            valid=valid,
+            n_superset=n_superset,
+            overflow=overflow,
+        )
+
+
+register_engine(DenseEngine())
+register_engine(FaithfulEngine("count_scan_write", direction="backward"))
+register_engine(FaithfulEngine("atomic_sort", direction="forward", sort_output=True))
+register_engine(FaithfulEngine("flags", method="flags", direction="backward"))
+register_engine(DensePallasEngine())

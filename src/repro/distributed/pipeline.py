@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
+from ..compat import pcast_varying, shard_map
 
 
 def pipeline_forward(
@@ -56,8 +57,8 @@ def pipeline_forward(
         outs = jnp.zeros_like(x_blk)
         # the loop makes these pod-varying; mark the initial values so the
         # scan carry types match (shard_map varying-manual-axes rule)
-        buf = lax.pcast(buf, (axis,), to="varying")
-        outs = lax.pcast(outs, (axis,), to="varying")
+        buf = pcast_varying(buf, (axis,))
+        outs = pcast_varying(outs, (axis,))
 
         def tick(carry, t):
             buf, outs = carry
@@ -84,7 +85,7 @@ def pipeline_forward(
         return outs
 
     other = tuple(a for a in mesh.axis_names if a != axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         stage_local, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),

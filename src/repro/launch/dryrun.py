@@ -107,7 +107,10 @@ def lower_cell(cfg, shape, mesh, *, remat: str = "full",
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    raw_cost = dict(compiled.cost_analysis())
+    raw_cost = compiled.cost_analysis()
+    if isinstance(raw_cost, (list, tuple)):   # older jax: list of dicts
+        raw_cost = raw_cost[0]
+    raw_cost = dict(raw_cost)
     ma = compiled.memory_analysis()
     memstats = _memstats_dict(ma)
     # trip-count-corrected per-device costs from the optimized HLO

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig, MoECfg
 from . import layers
+from ..compat import shard_map
 
 
 def _capacity(n_tokens: int, m: MoECfg) -> int:
@@ -193,7 +194,7 @@ def forward_sharded(p, cfg: ArchConfig, x, mesh):
 
     x_spec = P(batch_axes if len(batch_axes) > 1 else (batch_axes or (None,))[0],
                None, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(x_spec, P(), P("model"), P("model"), P("model")),
         out_specs=x_spec,

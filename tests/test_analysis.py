@@ -12,12 +12,18 @@ def _compile(f, *shapes):
     return jax.jit(f).lower(*shapes).compile()
 
 
+def _cost_analysis(c):
+    ca = c.cost_analysis()
+    # older jax returns a one-element list of dicts, newer a dict
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 def test_flops_match_cost_analysis_no_while():
     f = lambda x, w: jnp.tanh(x @ w) @ w
     c = _compile(f, jax.ShapeDtypeStruct((128, 256), jnp.float32),
                  jax.ShapeDtypeStruct((256, 256), jnp.float32))
     got = module_costs(c.as_text())["flops"]
-    assert got == c.cost_analysis()["flops"]
+    assert got == _cost_analysis(c)["flops"]
 
 
 def test_while_trip_multiplication():
@@ -27,8 +33,10 @@ def test_while_trip_multiplication():
                  jax.ShapeDtypeStruct((9, 256, 256), jnp.float32))
     got = module_costs(c.as_text())["flops"]
     assert got == 9 * 2 * 128 * 256 * 256
-    # cost_analysis undercounts (body once) — the reason this parser exists
-    assert c.cost_analysis()["flops"] == 2 * 128 * 256 * 256
+    # cost_analysis undercounts (body once) — the reason this parser exists;
+    # jax versions differ by a few non-matmul flops, so compare with slack
+    ca = _cost_analysis(c)["flops"]
+    assert abs(ca - 2 * 128 * 256 * 256) / (2 * 128 * 256 * 256) < 0.01
 
 
 def test_nested_while():
@@ -73,8 +81,8 @@ def test_collective_bytes_from_sharded_module():
         # multi-device path is covered by tests/test_multidevice.py
         return
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((jax.device_count(),), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((jax.device_count(),), ("model",))
     f = lambda x, w: x @ w
     sh = lambda *s: NamedSharding(mesh, P(*s))
     c = jax.jit(f, in_shardings=(sh(None, "model"), sh("model", None)),

@@ -1,0 +1,148 @@
+"""Device-resident miner: seed-parity, join equivalence, index reuse."""
+import numpy as np
+import pytest
+
+from repro.core import MinerConfig, generate_candidates, mine, mine_arrays
+from repro.core.episodes import Episode
+from repro.core.events import EventStream
+from repro.core.mining import (LevelResult, count_candidates,
+                               generate_candidates_arrays)
+
+
+def _random_stream(seed=7, n=400, n_types=6, rate=0.3):
+    rng = np.random.default_rng(seed)
+    return EventStream(
+        rng.integers(0, n_types, n).astype(np.int32),
+        np.cumsum(rng.exponential(rate, n)).astype(np.float32),
+        n_types)
+
+
+def _mine_seed_reference(stream, cfg):
+    """The seed repo's list-based miner, kept verbatim as the parity oracle."""
+    results = {}
+    types = np.asarray(stream.types)
+    level1_eps, level1_counts = [], []
+    binc = np.bincount(types, minlength=stream.n_types)
+    for t in range(stream.n_types):
+        if binc[t] >= cfg.threshold:
+            level1_eps.append(Episode((t,)))
+            level1_counts.append(int(binc[t]))
+    results[1] = LevelResult(level1_eps, level1_counts, stream.n_types)
+    frequent = level1_eps
+    for level in range(2, cfg.max_level + 1):
+        if not frequent:
+            break
+        cands = generate_candidates(frequent, level, cfg)
+        if not cands:
+            results[level] = LevelResult([], [], 0)
+            break
+        counts = count_candidates(stream, cands, cfg)
+        thr = (cfg.level_thresholds or {}).get(level, cfg.threshold)
+        keep = [(e, int(c)) for e, c in zip(cands, counts) if c >= thr]
+        results[level] = LevelResult(
+            [e for e, _ in keep], [c for _, c in keep], len(cands))
+        frequent = [e for e, _ in keep]
+    return results
+
+
+@pytest.mark.parametrize("threshold,max_level", [(20, 4), (35, 3), (8, 5)])
+def test_mine_matches_seed_reference(threshold, max_level):
+    """Fixed-seed regression: level-for-level identical episodes/counts."""
+    s = _random_stream()
+    cfg = MinerConfig(t_low=0.1, t_high=2.5, threshold=threshold,
+                      max_level=max_level, max_candidates=300)
+    got = mine(s, cfg)
+    want = _mine_seed_reference(s, cfg)
+    assert got.keys() == want.keys()
+    for lvl in want:
+        assert got[lvl].n_candidates == want[lvl].n_candidates, lvl
+        assert got[lvl].episodes == want[lvl].episodes, lvl
+        assert got[lvl].counts == want[lvl].counts, lvl
+
+
+def test_mine_with_level_thresholds_matches_seed():
+    s = _random_stream(seed=3)
+    cfg = MinerConfig(t_low=0.0, t_high=2.0, threshold=10,
+                      level_thresholds={2: 30, 3: 12}, max_level=4)
+    got = mine(s, cfg)
+    want = _mine_seed_reference(s, cfg)
+    assert got.keys() == want.keys()
+    for lvl in want:
+        assert got[lvl].episodes == want[lvl].episodes
+        assert got[lvl].counts == want[lvl].counts
+
+
+def test_candidate_join_arrays_match_reference():
+    rng = np.random.default_rng(0)
+    cfg = MinerConfig(t_low=0.1, t_high=2.0, threshold=1, max_candidates=4096)
+    for n in (2, 3, 4):
+        rows = np.unique(rng.integers(0, 4, size=(25, n)), axis=0).astype(np.int32)
+        rng.shuffle(rows)
+        frequent = [Episode(tuple(int(x) for x in r),
+                            (cfg.t_low,) * (n - 1), (cfg.t_high,) * (n - 1))
+                    for r in rows]
+        want = [e.symbols for e in generate_candidates(frequent, n + 1, cfg)]
+        got = generate_candidates_arrays(rows, n + 1, cfg)
+        assert want == [tuple(int(x) for x in r) for r in got]
+
+
+def test_candidate_join_truncation_matches_reference():
+    cfg = MinerConfig(t_low=0.0, t_high=1.0, threshold=1, max_candidates=7)
+    rows = np.asarray([[a, b] for a in range(4) for b in range(4)], np.int32)
+    frequent = [Episode((int(a), int(b)), (0.0,), (1.0,)) for a, b in rows]
+    want = [e.symbols for e in generate_candidates(frequent, 3, cfg)]
+    got = generate_candidates_arrays(rows, 3, cfg)
+    assert len(want) == 7 == got.shape[0]
+    assert want == [tuple(int(x) for x in r) for r in got]
+
+
+def test_index_built_once_per_stream(monkeypatch):
+    """mine() must build the per-type index once, not once per level."""
+    from repro.core import events as events_lib
+    calls = {"n": 0}
+    real = events_lib.type_index
+
+    def counting_type_index(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    import repro.core.mining as mining_mod
+    monkeypatch.setattr(mining_mod.events_lib, "type_index", counting_type_index)
+    s = _random_stream(seed=1, n=200)
+    cfg = MinerConfig(t_low=0.0, t_high=2.0, threshold=8, max_level=4)
+    res = mine(s, cfg)
+    assert max(res) >= 3, "want a multi-level run for this check to bite"
+    assert calls["n"] == 1
+
+
+@pytest.mark.parametrize("engine", ["dense_pallas", "count_scan_write"])
+def test_mine_engine_agreement(engine):
+    """Every registered engine drives the miner to the same result."""
+    s = _random_stream(seed=11, n=250, n_types=5)
+    kw = dict(t_low=0.1, t_high=2.0, threshold=12, max_level=3)
+    base = mine(s, MinerConfig(**kw, engine="dense"))
+    other = mine(s, MinerConfig(**kw, engine=engine,
+                                cap_occ=24 * s.n_events, max_window=128))
+    assert base.keys() == other.keys()
+    for lvl in base:
+        assert base[lvl].episodes == other[lvl].episodes, (engine, lvl)
+        assert base[lvl].counts == other[lvl].counts, (engine, lvl)
+
+
+def test_mine_arrays_consistent_with_mine():
+    s = _random_stream(seed=5)
+    cfg = MinerConfig(t_low=0.1, t_high=2.5, threshold=15, max_level=3)
+    eps = mine(s, cfg)
+    arrs = mine_arrays(s, cfg)
+    assert eps.keys() == arrs.keys()
+    for lvl in eps:
+        assert [e.symbols for e in eps[lvl].episodes] == [
+            tuple(int(x) for x in row) for row in arrs[lvl].symbols]
+        assert eps[lvl].counts == [int(c) for c in arrs[lvl].counts]
+
+
+def test_unknown_engine_raises():
+    s = _random_stream(seed=2, n=50)
+    cfg = MinerConfig(t_low=0.0, t_high=1.0, threshold=4, engine="nope")
+    with pytest.raises(ValueError, match="engine must be one of"):
+        mine(s, cfg)

@@ -31,8 +31,8 @@ times = np.cumsum(rng.exponential(0.4, size=n)).astype(np.float32)
 types = rng.integers(0, 5, size=n).astype(np.int32)
 ep = serial([1, 2, 3], 0.1, 2.5)
 want = count_fsm_numpy(types, times, ep)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 ty, tm = shard_stream(types, times, 4)
 got, short = make_count_sharded_jit(ep, mesh, n_types=5, halo=150)(ty, tm)
 assert int(got) == want, (int(got), want)
@@ -61,13 +61,14 @@ def test_compressed_psum_8dev():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.optim.compression import compressed_psum
-mesh = jax.make_mesh((8,), ("pod",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("pod",))
 x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 128)), jnp.float32)
 def f(x):
     key = jax.random.fold_in(jax.random.PRNGKey(0), jax.lax.axis_index("pod"))
     return compressed_psum(x[0], "pod", key)[None]
-y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"), out_specs=P("pod")))(x)
+from repro.compat import shard_map
+y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"), out_specs=P("pod")))(x)
 true = jnp.sum(x, axis=0)
 rel = float(jnp.linalg.norm(y[0] - true) / jnp.linalg.norm(true))
 assert rel < 0.05, rel
@@ -83,8 +84,8 @@ def test_pipeline_parallel_4stage():
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.distributed.pipeline import pipeline_forward
-mesh = jax.make_mesh((4,), ("pod",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("pod",))
 rng = np.random.default_rng(0)
 n_stages, n_micro, mb, d = 4, 6, 3, 8
 ws = jnp.asarray(rng.normal(size=(n_stages, d, d)) * 0.3, jnp.float32)

@@ -1,5 +1,10 @@
 """Hypothesis property tests for the counting system's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (count_fsm_numpy, count_nonoverlapped, serial)
@@ -27,16 +32,37 @@ def episodes(draw, n_types=4):
     return serial(syms, lo, lo + width)
 
 
+@pytest.mark.parametrize("engine", ["dense", "dense_pallas"])
 @settings(max_examples=40, deadline=None)
-@given(streams(), episodes())
-def test_dense_matches_fsm_oracle(s, ep):
+@given(s=streams(), ep=episodes())
+def test_dense_matches_fsm_oracle(engine, s, ep):
     if max(ep.symbols) >= s.n_types:
         ep = serial([x % s.n_types for x in ep.symbols],
                     ep.t_low[0] if ep.t_low else 0,
                     ep.t_high[0] if ep.t_high else 1)
     want = count_fsm_numpy(s.types, s.times, ep)
-    got = count_nonoverlapped(s, ep, engine="dense")
+    # dense_pallas runs the Pallas kernel in interpret mode on CPU
+    got = count_nonoverlapped(s, ep, engine=engine)
     assert int(got.count) == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 4))
+def test_candidate_join_matches_reference(seed, n):
+    """Array-based suffix/prefix join == the list-based reference join."""
+    from repro.core import MinerConfig
+    from repro.core.episodes import Episode
+    from repro.core.mining import generate_candidates, generate_candidates_arrays
+    rng = np.random.default_rng(seed)
+    rows = np.unique(rng.integers(0, 5, size=(12, n)), axis=0).astype(np.int32)
+    rng.shuffle(rows)
+    cfg = MinerConfig(t_low=0.1, t_high=2.0, threshold=1, max_candidates=4096)
+    frequent = [Episode(tuple(int(x) for x in r),
+                        (cfg.t_low,) * (n - 1), (cfg.t_high,) * (n - 1))
+                for r in rows]
+    want = generate_candidates(frequent, n + 1, cfg)
+    got = generate_candidates_arrays(rows, n + 1, cfg)
+    assert [e.symbols for e in want] == [tuple(int(x) for x in r) for r in got]
 
 
 @settings(max_examples=25, deadline=None)
