@@ -5,10 +5,16 @@ counting a batch of episodes over datasets 1-8 (time-scaled; relative
 curves match the paper).
 Fig 10: single-episode counting, serial FSM vs the redesigned algorithm.
 
-Also runs the engine head-to-head sweep (dense vs dense_pallas vs
-count_scan_write across episode lengths and stream sizes) and persists it
-to ``BENCH_counting.json`` so successive PRs accumulate a perf trajectory
-for the production counting path.
+Also runs the engine head-to-head sweep (dense vs dense_pallas vs the
+fused-batch dense_pallas_fused vs count_scan_write across episode lengths,
+stream sizes, and batch sizes, plus a greedy-scheduler head-to-head) and
+persists it to ``BENCH_counting.json`` so successive PRs accumulate a perf
+trajectory for the production counting path
+(``benchmarks/run.py --compare`` gates regressions against it).
+
+Set ``REPRO_BENCH_SMOKE=1`` for a seconds-scale CI smoke: tiny sweep, JSON
+written to BENCH_counting.smoke.json so the checked-in baseline is never
+clobbered by throwaway numbers.
 
 On this CPU container the "GPU" engines run as XLA:CPU programs (the
 Pallas engine in interpret mode); the quantity of interest is the
@@ -19,6 +25,7 @@ same harness.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 
 import jax
@@ -35,11 +42,19 @@ SCALE = 0.01          # time-scale of the paper's datasets (CPU budget)
 DATASETS = (4, 5, 6, 7, 8)   # larger sets dominate runtime; keep the sweep
 
 # engine head-to-head sweep (BENCH_counting.json)
-SWEEP_ENGINES = ("dense", "dense_pallas", "count_scan_write")
+SWEEP_ENGINES = ("dense", "dense_pallas", "dense_pallas_fused",
+                 "count_scan_write")
 SWEEP_EPISODE_LENGTHS = (3, 4, 5)
 SWEEP_STREAM_SIZES = (1024, 4096)
-SWEEP_BATCH = 8
+SWEEP_BATCHES = (8, 32)
+CSW_MAX_BATCH = 8     # count_scan_write is seconds/call at 4096; cap its sweep
+SCHEDULER_ENGINE = "dense"   # scheduler head-to-head rides the fastest engine
 JSON_PATH = pathlib.Path("BENCH_counting.json")
+SMOKE_JSON_PATH = pathlib.Path("BENCH_counting.smoke.json")
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
 
 def _sweep_stream(n_events: int, n_types: int = 8):
@@ -49,40 +64,69 @@ def _sweep_stream(n_events: int, n_types: int = 8):
     return types, times, n_types
 
 
-def run_engine_sweep() -> None:
-    """Engines head-to-head; emits CSV lines + BENCH_counting.json."""
+def run_engine_sweep(json_path: pathlib.Path | None = None) -> list:
+    """Engines head-to-head; emits CSV lines + BENCH_counting.json.
+
+    Every entry carries a ``scheduler`` key ("scan" = paper Algorithm 1 as
+    lax.scan, "parallel" = greedy_parallel binary lifting); the scheduler
+    head-to-head runs both on SCHEDULER_ENGINE, everything else on "scan".
+
+    ``json_path`` overrides the output file — the --compare gate passes a
+    sidecar so it never clobbers the checked-in baseline it gates against.
+    """
+    smoke = _smoke()
+    stream_sizes = (256,) if smoke else SWEEP_STREAM_SIZES
+    episode_lengths = (3,) if smoke else SWEEP_EPISODE_LENGTHS
+    batches = (4,) if smoke else SWEEP_BATCHES
+    warmup, iters = (1, 1) if smoke else (1, 3)  # median of 3 resists outliers
     entries = []
-    for n_events in SWEEP_STREAM_SIZES:
+    for n_events in stream_sizes:
         types, times, n_types = _sweep_stream(n_events)
-        for ep_len in SWEEP_EPISODE_LENGTHS:
+        for ep_len in episode_lengths:
             rng = np.random.default_rng(ep_len)
-            eps = [serial(rng.integers(0, n_types, ep_len).tolist(), 0.1, 2.0)
-                   for _ in range(SWEEP_BATCH)]
-            sym, lo, hi = episode_batch(eps)
-            for engine in SWEEP_ENGINES:
-                kw = dict(n_types=n_types, cap=n_events, engine=engine)
-                if engine == "count_scan_write":
-                    kw.update(cap_occ=4 * n_events, max_window=64)
-                us = time_fn(
-                    lambda kw=kw: count_batch(types, times, sym, lo, hi, **kw),
-                    warmup=1, iters=2)
-                name = f"sweep_n{n_events}_len{ep_len}_{engine}"
-                emit(name, us, f"batch={SWEEP_BATCH}")
-                entries.append({
-                    "engine": engine,
-                    "episode_len": ep_len,
-                    "n_events": n_events,
-                    "batch": SWEEP_BATCH,
-                    "us_per_call": round(us, 1),
-                })
-    JSON_PATH.write_text(json.dumps(
+            for batch in batches:
+                eps = [serial(rng.integers(0, n_types, ep_len).tolist(),
+                              0.1, 2.0)
+                       for _ in range(batch)]
+                sym, lo, hi = episode_batch(eps)
+                runs = [(engine, False) for engine in SWEEP_ENGINES
+                        if not (engine == "count_scan_write"
+                                and batch > CSW_MAX_BATCH)]
+                runs.append((SCHEDULER_ENGINE, True))
+                for engine, par in runs:
+                    kw = dict(n_types=n_types, cap=n_events, engine=engine,
+                              parallel_schedule=par)
+                    if engine == "count_scan_write":
+                        kw.update(cap_occ=4 * n_events, max_window=64)
+                    us = time_fn(
+                        lambda kw=kw: count_batch(types, times, sym, lo, hi,
+                                                  **kw),
+                        warmup=warmup, iters=iters)
+                    sched = "parallel" if par else "scan"
+                    name = f"sweep_n{n_events}_len{ep_len}_b{batch}_{engine}"
+                    if par:
+                        name += "_parsched"
+                    emit(name, us, f"batch={batch}")
+                    entries.append({
+                        "engine": engine,
+                        "scheduler": sched,
+                        "episode_len": ep_len,
+                        "n_events": n_events,
+                        "batch": batch,
+                        "us_per_call": round(us, 1),
+                    })
+    path = json_path or (SMOKE_JSON_PATH if smoke else JSON_PATH)
+    path.write_text(json.dumps(
         {"backend": jax.default_backend(), "suite": "counting_engine_sweep",
          "entries": entries}, indent=2) + "\n")
-    emit("sweep_json_written", 0.0, str(JSON_PATH))
+    emit("sweep_json_written", 0.0, str(path))
+    return entries
 
 
 def run() -> None:
     run_engine_sweep()
+    if _smoke():
+        return
     cfg = NetworkConfig()
     eps = embedded_episodes(cfg)
     # 30-episode batch (paper counts 30 episodes): sub-episodes of embedded

@@ -1,8 +1,100 @@
 """Benchmark harness: one module per paper table/figure. Emits
-``name,us_per_call,derived`` CSV lines (benchmarks/common.py)."""
+``name,us_per_call,derived`` CSV lines (benchmarks/common.py).
+
+``--compare BASELINE.json`` re-runs the counting engine sweep and prints
+per-engine speedups against the checked-in baseline (the perf-trajectory
+gate of DESIGN.md §6): exits nonzero when the baseline's fastest engine in
+any cell regresses by more than REGRESSION_THRESHOLD.
+"""
 import argparse
+import json
 import sys
 import traceback
+
+REGRESSION_THRESHOLD = 0.25   # fastest engine may not slow down >25%
+
+
+def _cell_key(entry) -> tuple:
+    return (entry["episode_len"], entry["n_events"], entry.get("batch"),
+            entry.get("scheduler", "scan"))
+
+
+def compare_entries(baseline, new, threshold=REGRESSION_THRESHOLD):
+    """Compare sweep entry lists; returns (report_lines, regressions).
+
+    Speedup = baseline_us / new_us (>1 is faster). A regression is the
+    *baseline-fastest* engine of any (episode_len, n_events, batch,
+    scheduler) cell slowing down by more than ``threshold`` — or going
+    missing from the new sweep entirely (an unmeasured fastest engine is an
+    ungated cell, not a pass). New engines or cells absent from the
+    baseline are reported but never gate.
+    """
+    base_by = {(_cell_key(e), e["engine"]): e["us_per_call"] for e in baseline}
+    new_by = {(_cell_key(e), e["engine"]): e["us_per_call"] for e in new}
+    lines, regressions = [], []
+    for e in new:
+        key = _cell_key(e)
+        tag = f"len={key[0]} n={key[1]} batch={key[2]} sched={key[3]}"
+        base_us = base_by.get((key, e["engine"]))
+        if base_us is None:
+            lines.append(f"{tag} {e['engine']}: {e['us_per_call']:.1f}us (new)")
+        else:
+            speedup = base_us / max(e["us_per_call"], 1e-9)
+            lines.append(
+                f"{tag} {e['engine']}: {e['us_per_call']:.1f}us "
+                f"({speedup:.2f}x vs baseline {base_us:.1f}us)")
+    fastest = {}
+    for e in baseline:
+        key = _cell_key(e)
+        if key not in fastest or e["us_per_call"] < fastest[key][1]:
+            fastest[key] = (e["engine"], e["us_per_call"])
+    for key, (engine, base_us) in sorted(fastest.items()):
+        tag = f"len={key[0]} n={key[1]} batch={key[2]} sched={key[3]}"
+        new_us = new_by.get((key, engine))
+        if new_us is None:
+            regressions.append(
+                f"{tag} {engine}: baseline-fastest engine missing from the "
+                f"new sweep — cell not gated")
+        elif new_us > (1.0 + threshold) * base_us:
+            regressions.append(
+                f"{tag} {engine}: {base_us:.1f}us -> {new_us:.1f}us "
+                f"(>{threshold:.0%} regression of the fastest engine)")
+    return lines, regressions
+
+
+def matched_cells(baseline, new) -> int:
+    """(cell, engine) pairs present in both entry lists — the gate is
+    vacuous (and must fail) when nothing overlaps."""
+    base_keys = {(_cell_key(e), e["engine"]) for e in baseline}
+    return sum(1 for e in new if (_cell_key(e), e["engine"]) in base_keys)
+
+
+def run_compare(baseline_path: str) -> int:
+    import pathlib
+
+    from . import bench_counting
+    with open(baseline_path) as f:
+        baseline = json.load(f)["entries"]
+    # sidecar output: the gate must never overwrite the baseline it reads
+    new = bench_counting.run_engine_sweep(
+        json_path=pathlib.Path("BENCH_counting.compare.json"))
+    lines, regressions = compare_entries(baseline, new)
+    print(f"\n== compare vs {baseline_path} ==")
+    for line in lines:
+        print(line)
+    if not matched_cells(baseline, new):
+        print("\nERROR: no sweep cell overlaps the baseline — nothing was "
+              "gated (is REPRO_BENCH_SMOKE set, or is the baseline from a "
+              "different sweep configuration?)")
+        return 1
+    if regressions:
+        print("\nREGRESSIONS:")
+        for r in regressions:
+            print(r)
+        return 1
+    print("\nno regression of any cell's fastest engine "
+          f"(threshold {REGRESSION_THRESHOLD:.0%})")
+    return 0
 
 
 def main() -> None:
@@ -10,7 +102,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: counting,mining,episode_length,"
                          "frequency,instruction_mix,distributed")
+    ap.add_argument("--compare", default=None, metavar="BASELINE_JSON",
+                    help="re-run the counting sweep and gate against a "
+                         "checked-in BENCH_counting.json baseline")
     args = ap.parse_args()
+    if args.compare:
+        raise SystemExit(run_compare(args.compare))
     from . import (bench_counting, bench_distributed, bench_episode_length,
                    bench_frequency, bench_instruction_mix, bench_mining)
     suites = {

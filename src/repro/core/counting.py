@@ -8,6 +8,11 @@ engine registry in tracking.py:
   engine="dense_pallas"           dense tracking with each level executed by
                                   the Pallas TPU kernel (kernels/episode_track)
                                   via kernels/ops.py; interpret mode off-TPU
+  engine="dense_pallas_fused"     dense tracking for an entire candidate
+                                  batch in ONE fused Pallas launch: levels
+                                  carried in VMEM scratch, scan offsets
+                                  scalar-prefetched, dynamic window walk;
+                                  batched dispatch via ``track_batch``
   engine="count_scan_write"       paper's preferred lock-free pipeline:
                                   backward tracking + count/scan/write
                                   compaction; output auto-sorted by end time
@@ -130,9 +135,31 @@ def count_batch_indexed(
     The miner builds the index once per stream and calls this for every
     level — the paper's pre-processing amortization extended across the
     whole level-wise search. Returns (counts[B], n_superset[B], overflow[B]).
+
+    Engines exposing the optional natively-batched ``track_batch`` protocol
+    method (see tracking.TrackingEngine) receive the whole batch in one
+    call — one fused kernel launch per mining level instead of ``B x (N-1)``
+    vmapped per-level launches; everything else takes the vmapped path.
     """
     cap = table.shape[1]
     index_overflow = jnp.any(counts > cap)
+    eng = tracking.get_engine(engine)
+    track_batch = getattr(eng, "track_batch", None)
+
+    if track_batch is not None:
+        cfg = tracking.EngineConfig(
+            cap_occ=cap_occ, max_window=max_window, block_next=block_next,
+            block_prev=block_prev, window_tiles=window_tiles,
+            interpret=interpret)
+        occ = track_batch(table[symbols], t_low, t_high, cfg)
+
+        def schedule(starts, ends, valid):
+            one = tracking.Occurrences(
+                starts, ends, valid, jnp.int32(0), jnp.bool_(False))
+            return scheduling.greedy_count(one, parallel=parallel_schedule)
+
+        batch_counts = jax.vmap(schedule)(occ.starts, occ.ends, occ.valid)
+        return batch_counts, occ.n_superset, occ.overflow | index_overflow
 
     def one(sym, lo, hi):
         tbs = table[sym]

@@ -21,9 +21,11 @@ as the join's reference implementation.
 
 The paper's focus is the *later* levels, where few-but-long episodes leave
 a one-thread-per-episode scheme under-utilized; here every level uses the
-data-parallel counting engines of counting.py (including the Pallas-kernel
-``dense_pallas`` engine), so parallelism is over (episodes x events)
-regardless of level.
+data-parallel counting engines of counting.py, so parallelism is over
+(episodes x events) regardless of level. With a natively-batched engine
+(``dense_pallas_fused``) the whole level is ONE fused kernel launch:
+``count_batch_indexed`` dispatches the entire candidate batch through the
+engine's ``track_batch`` instead of vmapping B per-episode pipelines.
 """
 from __future__ import annotations
 
@@ -53,6 +55,8 @@ class MinerConfig:
     cap: Optional[int] = None    # per-type event capacity (default: n_events)
     cap_occ: Optional[int] = None
     max_window: int = 32
+    parallel_schedule: bool = False  # greedy_parallel (O(log^2 n) depth)
+                                     # instead of the lax.scan scheduler
     max_candidates: int = 4096   # safety valve per level
     block_next: int = 256        # Pallas tile shape (dense_pallas engine)
     block_prev: int = 256
@@ -172,6 +176,7 @@ def count_candidates(
         stream.types, stream.times, sym, lo, hi,
         n_types=stream.n_types, cap=cap, engine=cfg.engine,
         cap_occ=cfg.cap_occ, max_window=cfg.max_window,
+        parallel_schedule=cfg.parallel_schedule,
         block_next=cfg.block_next, block_prev=cfg.block_prev,
         window_tiles=cfg.window_tiles, interpret=cfg.interpret)
     counts = np.asarray(counts)[:b]
@@ -220,6 +225,7 @@ def mine_arrays(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelArrays]
         counts_dev, _, overflow = counting.count_batch_indexed(
             table, type_counts, jnp.asarray(sym), lo, hi,
             engine=cfg.engine, cap_occ=cfg.cap_occ, max_window=cfg.max_window,
+            parallel_schedule=cfg.parallel_schedule,
             block_next=cfg.block_next, block_prev=cfg.block_prev,
             window_tiles=cfg.window_tiles, interpret=cfg.interpret)
         keep_dev = counts_dev >= jnp.int32(thr)             # pruned on device

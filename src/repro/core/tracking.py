@@ -36,7 +36,6 @@ falling back to interpret mode off-TPU (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, NamedTuple, Optional, Protocol, Tuple
 
 import jax
@@ -264,6 +263,17 @@ class TrackingEngine(Protocol):
 
     ``track`` must be jit/vmap-traceable: static shapes in, static shapes
     out, with the Occurrences padding convention (+inf ends, -inf starts).
+
+    Engines MAY additionally provide a natively-batched
+
+        ``track_batch(times_by_sym f32[B, N, cap], t_low f32[B, N-1],
+                      t_high f32[B, N-1], cfg) -> Occurrences``
+
+    returning batch-leading Occurrences (``starts/ends/valid`` are
+    ``[B, cap]``, ``n_superset``/``overflow`` are ``[B]``). When present,
+    ``counting.count_batch_indexed`` dispatches an entire candidate batch
+    through it in one call instead of vmapping the per-episode ``track`` —
+    the fused-kernel fast path.
     """
 
     name: str
@@ -328,6 +338,18 @@ class FaithfulEngine:
         return sort_by_end(occ) if self.sort_output else occ
 
 
+def _pallas_tile_geometry(cap: int, cfg: EngineConfig):
+    """(bn, bp, padded_cap) for the Pallas engines: the engine-policy block
+    clamp ([8, 256] — VMEM-friendly defaults) composed with the single
+    shared tiling rule in kernels/ops.py, so the per-level and fused
+    engines tile identically (their conservative window-truncation checks
+    must agree tile-for-tile)."""
+    from ..kernels import ops  # deferred: core stays importable sans pallas
+
+    return ops.tile_geometry(
+        cap, max(8, min(cfg.block_next, 256)), max(8, min(cfg.block_prev, 256)))
+
+
 @dataclasses.dataclass(frozen=True)
 class DensePallasEngine:
     """Dense tracking with each level executed by the Pallas TPU kernel.
@@ -351,28 +373,11 @@ class DensePallasEngine:
         from ..kernels import ops  # deferred: core stays importable sans pallas
 
         n, cap = times_by_sym.shape
-        bn = max(8, min(cfg.block_next, 256))
-        bp = max(8, min(cfg.block_prev, 256))
-        tile = math.lcm(bn, bp)
-        pcap = ((cap + tile - 1) // tile) * tile
-        bn = min(bn, pcap)
-        bp = min(bp, pcap)
+        bn, bp, pcap = _pallas_tile_geometry(cap, cfg)
 
         def pad_t(row):
             return jnp.concatenate(
                 [row, jnp.full((pcap - cap,), jnp.inf, row.dtype)])
-
-        def window_truncated(t_prev, t_next, hi):
-            """Conservative (traceable) twin of ops.required_window_tiles:
-            flags any next tile whose window span may exceed the scan cap."""
-            nt = pcap // bn
-            finite_next = jnp.where(jnp.isfinite(t_next), t_next, NEG)
-            tile_min = t_next.reshape(nt, bn)[:, 0]
-            tile_max = finite_next.reshape(nt, bn).max(axis=1)
-            lo_i = jnp.searchsorted(t_prev, tile_min - hi, side="left")
-            hi_i = jnp.searchsorted(t_prev, tile_max, side="left")
-            span = jnp.clip(hi_i - lo_i, 0, pcap)
-            return jnp.any(span // bp + 2 > cfg.window_tiles)
 
         t0 = times_by_sym[0]
         v = jnp.where(jnp.isfinite(t0), t0, NEG)
@@ -383,7 +388,9 @@ class DensePallasEngine:
         for i in range(n - 1):
             t_next = pad_t(times_by_sym[i + 1])
             if cfg.window_tiles > 0 and cfg.window_tiles < pcap // bp:
-                overflow = overflow | window_truncated(t_prev, t_next, t_high[i])
+                # same shared predicate as the fused engine's precompute
+                overflow = overflow | ops.window_truncated(
+                    t_prev, t_next, t_high[i], bn, bp, cfg.window_tiles)
             v = ops.track_level(
                 t_prev, v, t_next, t_low[i], t_high[i],
                 block_next=bn, block_prev=bp,
@@ -403,8 +410,58 @@ class DensePallasEngine:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedDensePallasEngine:
+    """Dense tracking for a whole candidate batch in ONE fused Pallas launch.
+
+    Same dominance argument (and counts) as ``dense``/``dense_pallas``, but
+    instead of ``B x (N-1)`` per-level kernel launches with HBM round-trips
+    between them, the whole batch runs on a ``(episodes, levels, next_tiles)``
+    grid: latest-start values stay in VMEM scratch across levels, the
+    per-(episode, level, tile) scan offsets are scalar-prefetched as one
+    precomputed table, and each next tile walks exactly the prev tiles its
+    constraint window spans (a dynamic in-kernel loop — no static quadratic
+    tile coverage). See kernels/episode_track.py and DESIGN.md §2.
+
+    ``track_batch`` is the native entry point (dispatched by
+    ``counting.count_batch_indexed``); ``track`` wraps it with a singleton
+    batch so the engine also serves the per-episode API. ``window_tiles``
+    keeps the per-level engine's semantics: 0 = exact, > 0 caps each tile's
+    scan length and flags possible truncation through ``overflow`` using
+    the same conservative span bound as ``dense_pallas``.
+    """
+
+    name: str = "dense_pallas_fused"
+
+    def track(self, times_by_sym, t_low, t_high, cfg: EngineConfig) -> Occurrences:
+        occ = self.track_batch(
+            times_by_sym[None], t_low[None], t_high[None], cfg)
+        return Occurrences(*(x[0] for x in occ))
+
+    def track_batch(self, times_by_sym, t_low, t_high, cfg: EngineConfig) -> Occurrences:
+        from ..kernels import ops  # deferred: core stays importable sans pallas
+
+        # same policy-clamped blocks as the per-level engine; ops.track_batch
+        # applies the shared tile_geometry rule, so the two Pallas engines'
+        # conservative truncation checks agree tile-for-tile
+        bn, bp, _ = _pallas_tile_geometry(times_by_sym.shape[-1], cfg)
+        starts, n_superset, truncated = ops.track_batch(
+            times_by_sym, t_low, t_high, block_next=bn, block_prev=bp,
+            window_tiles=cfg.window_tiles, interpret=cfg.interpret)
+        ends = times_by_sym[:, -1, :]
+        valid = (starts > NEG) & jnp.isfinite(ends)
+        return Occurrences(
+            starts=starts,
+            ends=jnp.where(valid, ends, jnp.inf),
+            valid=valid,
+            n_superset=n_superset,
+            overflow=truncated,
+        )
+
+
 register_engine(DenseEngine())
 register_engine(FaithfulEngine("count_scan_write", direction="backward"))
 register_engine(FaithfulEngine("atomic_sort", direction="forward", sort_output=True))
 register_engine(FaithfulEngine("flags", method="flags", direction="backward"))
 register_engine(DensePallasEngine())
+register_engine(FusedDensePallasEngine())

@@ -17,6 +17,15 @@ duplicated boundary tiles are harmless.
 
 VMEM per grid step: BN + 2*BP + BN*BP fp32 ≈ 0.27 MB at BN=BP=256 — far
 under the ~16 MB/core budget, leaving room for double buffering.
+
+Fused batched variant (DESIGN.md §2): ``track_batch_pallas`` runs an entire
+candidate batch's multi-level tracking in ONE launch. Grid = ``(episodes,
+levels, next_tiles)``; the latest-start vector never leaves VMEM between
+levels (a ``(2, cap)`` double-buffered scratch, flipped per level), the
+per-(episode, level, next-tile) first-prev-tile offsets and scan lengths
+are scalar-prefetched as one precomputed table, and the window walk is a
+*dynamic* ``fori_loop`` over exactly the prev tiles each next tile's
+constraint window spans — no static quadratic tile coverage at all.
 """
 from __future__ import annotations
 
@@ -115,3 +124,134 @@ def track_level_pallas(
         interpret=interpret,
     )
     return kernel(start_tile, window, t_next, t_prev, v_prev)
+
+
+# ---------------------------------------------------------------------------
+# Fused batched multi-level kernel
+# ---------------------------------------------------------------------------
+
+
+def _track_batch_kernel(
+    # scalar-prefetch operands (flattened tables; shapes are SMEM-friendly 1-D)
+    start_ref,          # i32[B*L*NT] first prev tile per (episode, level, next-tile)
+    num_ref,            # i32[B*L*NT] prev tiles to scan per (episode, level, next-tile)
+    t_low_ref,          # f32[B*L] per-episode, per-level window low
+    t_high_ref,         # f32[B*L] per-episode, per-level window high
+    # array operands
+    t_next_ref,         # f32[1, 1, BN]  next-symbol tile of the current level
+    t_prev_ref,         # f32[1, 1, cap] full prev-symbol row (revisited across tiles)
+    # outputs
+    v_out_ref,          # f32[1, BN]  final-level latest-start values
+    nsup_ref,           # i32[1, 1]   per-episode superset-size accumulator
+    # scratch
+    vbuf,               # f32[2, cap] level-ping-pong latest-start buffer
+    *,
+    levels: int,
+    next_tiles: int,
+    block_next: int,
+    block_prev: int,
+):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+    i = pl.program_id(2)
+    p = jax.lax.rem(l, 2)
+    bn, bp = block_next, block_prev
+
+    t_next = t_next_ref[0, 0, :]                               # [BN]
+    t_lo = t_low_ref[b * levels + l]
+    t_hi = t_high_ref[b * levels + l]
+    flat = (b * levels + l) * next_tiles + i
+    st = start_ref[flat]
+    num = num_ref[flat]
+    is_first_level = l == 0
+
+    def scan_tile(j, acc):
+        off = (st + j) * bp
+        tp = t_prev_ref[0, 0, pl.ds(off, bp)]                  # [BP]
+        # level 0 seeds latest-start = the first-symbol event time itself;
+        # later levels read the previous level's values from VMEM scratch.
+        vp = jnp.where(is_first_level,
+                       jnp.where(jnp.isfinite(tp), tp, NEG),
+                       vbuf[p, pl.ds(off, bp)])
+        ok = (tp[None, :] >= t_next[:, None] - t_hi) & (
+            tp[None, :] < t_next[:, None] - t_lo)              # [BN, BP]
+        return jnp.maximum(
+            acc, jnp.max(jnp.where(ok, vp[None, :], NEG), axis=1))
+
+    acc = jax.lax.fori_loop(
+        0, num, scan_tile, jnp.full((bn,), NEG, jnp.float32))
+    acc = jnp.where(jnp.isfinite(t_next), acc, NEG)
+    vbuf[1 - p, pl.ds(i * bn, bn)] = acc
+    # every visit writes; the grid is sequential so the last level's values
+    # are what lands in HBM for this (episode, tile) block.
+    v_out_ref[0, :] = acc
+
+    # superset size: count of reachable end events, accumulated per level in
+    # the revisited (1, 1) output block; seeded with the level-0 event count.
+    n0 = jnp.sum(jnp.isfinite(t_prev_ref[0, 0, :])).astype(jnp.int32)
+    seed = jnp.where(is_first_level & (i == 0), n0, nsup_ref[0, 0])
+    nsup_ref[0, 0] = seed + jnp.sum(acc > NEG).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_next", "block_prev", "interpret"),
+)
+def track_batch_pallas(
+    times_by_sym: jax.Array,    # f32[B, N, cap] sorted rows, +inf padded
+    t_low: jax.Array,           # f32[B, N-1]
+    t_high: jax.Array,          # f32[B, N-1]
+    start_tile: jax.Array,      # i32[B, N-1, next_tiles] first prev tile to scan
+    num_tiles: jax.Array,       # i32[B, N-1, next_tiles] prev tiles to scan
+    *,
+    block_next: int = 256,
+    block_prev: int = 256,
+    interpret: bool = False,
+) -> tuple:
+    """Whole-batch multi-level tracking in one fused launch.
+
+    Returns ``(starts f32[B, cap], n_superset i32[B])``: the final-level
+    latest-start values (before end-validity masking) and the per-episode
+    tracked superset size. ``start_tile``/``num_tiles`` come from
+    ``ops.window_scan_table`` — exact per-tile spans, so the kernel is exact
+    whenever the table is uncapped (``ops`` flags any capping).
+    """
+    batch, n, cap = times_by_sym.shape
+    levels = n - 1
+    if levels < 1:
+        raise ValueError("need at least a 2-symbol episode for the kernel")
+    bn = min(block_next, cap)
+    bp = min(block_prev, cap)
+    if cap % bn or cap % bp:
+        raise ValueError(f"cap={cap} must be a multiple of block sizes {bn},{bp}")
+    next_tiles = cap // bn
+
+    kernel = pl.pallas_call(
+        functools.partial(
+            _track_batch_kernel, levels=levels, next_tiles=next_tiles,
+            block_next=bn, block_prev=bp),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(batch, levels, next_tiles),
+            in_specs=[
+                pl.BlockSpec((1, 1, bn), lambda b, l, i, *_: (b, l + 1, i)),
+                pl.BlockSpec((1, 1, cap), lambda b, l, i, *_: (b, l, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, bn), lambda b, l, i, *_: (b, i)),
+                pl.BlockSpec((1, 1), lambda b, l, i, *_: (b, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((2, cap), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, cap), jnp.float32),
+            jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    starts, nsup = kernel(
+        start_tile.reshape(-1), num_tiles.reshape(-1),
+        t_low.reshape(-1).astype(jnp.float32),
+        t_high.reshape(-1).astype(jnp.float32),
+        times_by_sym, times_by_sym)
+    return starts, nsup[:, 0]

@@ -1,8 +1,26 @@
-"""jit'd public wrappers around the Pallas kernels (+ exactness bounds)."""
+"""jit'd public wrappers around the Pallas kernels (+ exactness bounds).
+
+Two entry points drive ``episode_track``:
+
+* :func:`track_level` — one tracking level, one ``pallas_call``. Arrays of
+  any capacity are accepted: they are padded up to a tile multiple (+inf
+  times / -inf values — a max-accumulation no-op) instead of degrading the
+  block sizes to a divisor of the capacity.
+* :func:`track_batch` — the fused batched path: a whole ``[B, N, cap]``
+  candidate batch's multi-level tracking in ONE launch, with the
+  per-(episode, level, next-tile) scan table precomputed here (the paper's
+  per-type index made block-level, batched) and window-cap truncation
+  *flagged, never silent*.
+
+The window-span math (`searchsorted` over next-tile extrema) is shared by
+the static host-side bounds (:func:`required_window_tiles`,
+:func:`required_window_tiles_batch`) and the traced batched precompute
+(:func:`window_scan_table`) through :func:`_tile_spans`.
+"""
 from __future__ import annotations
 
-import functools
-from typing import Optional
+import math
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +31,58 @@ from . import ref as _ref
 
 NEG = -jnp.inf
 
+# Interpret-mode (off-TPU) batching granularity for the fused kernel: the
+# interpret grid loop carries the full operand buffers through a
+# lax.while_loop and writes blocks back each step, which costs
+# O(grid_steps x batch_buffer) — quadratic in the batch size. Mapping over
+# fixed-size chunks keeps the emulation linear; on real TPUs the kernel is
+# launched once for the whole batch and this constant is irrelevant.
+_INTERPRET_BATCH_CHUNK = 8
+
+
+# ---------------------------------------------------------------------------
+# Window-span bounds (shared: host bounds + traced fused precompute)
+# ---------------------------------------------------------------------------
+
+
+def _searchsorted_rows(a: jax.Array, v: jax.Array) -> jax.Array:
+    """Row-wise ``searchsorted(a[..., :], v[..., :], 'left')`` over any
+    (shared) leading batch dims."""
+    if a.ndim == 1:
+        return jnp.searchsorted(a, v, side="left")
+    flat_a = a.reshape(-1, a.shape[-1])
+    flat_v = v.reshape(-1, v.shape[-1])
+    out = jax.vmap(lambda x, y: jnp.searchsorted(x, y, side="left"))(
+        flat_a, flat_v)
+    return out.reshape(v.shape)
+
+
+def _tile_spans(
+    t_prev: jax.Array,   # f32[..., cap] sorted rows, +inf padded
+    t_next: jax.Array,   # f32[..., cap] sorted rows, +inf padded
+    t_high,              # f32[...] (or scalar) per-row window high
+    block_next: int,
+    block_prev: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per next-tile prev-event span ``[lo_idx, hi_idx)`` + occupancy mask.
+
+    A next tile with min ``a0`` / finite max ``a1`` needs prev events in
+    ``[a0 - t_high, a1)``; rows are sorted so the tile min is element 0 and
+    padding tiles (min = +inf) report ``has = False``. Returns
+    ``(lo_idx, hi_idx, has)`` each shaped ``[..., next_tiles]``.
+    """
+    nt = t_next.shape[-1] // block_next
+    tiles = t_next[..., : nt * block_next].reshape(
+        t_next.shape[:-1] + (nt, block_next))
+    tile_min = tiles[..., 0]
+    finite = jnp.isfinite(tiles)
+    tile_max = jnp.max(jnp.where(finite, tiles, -jnp.inf), axis=-1)
+    has = finite[..., 0]
+    t_high = jnp.asarray(t_high, jnp.float32)[..., None]
+    lo_idx = _searchsorted_rows(t_prev, tile_min - t_high)
+    hi_idx = _searchsorted_rows(t_prev, tile_max)
+    return lo_idx.astype(jnp.int32), hi_idx.astype(jnp.int32), has
+
 
 def required_window_tiles(
     t_prev: np.ndarray, t_next: np.ndarray, t_high: float,
@@ -20,26 +90,129 @@ def required_window_tiles(
 ) -> int:
     """Host-side tight bound on prev tiles any next tile's window can span.
 
-    A next tile [a0, a1] needs prev events in [a0 - t_high, a1); the kernel
-    starts at tile(searchsorted(a0 - t_high)) so the span in events is
-    searchsorted(a1^-) - searchsorted(a0 - t_high), plus one tile of
-    misalignment slack.
+    Vectorized (reshape + one searchsorted per side) twin of the old
+    per-tile Python loop: span in events plus one tile of misalignment
+    slack, maxed over occupied next tiles.
     """
     t_prev = np.asarray(t_prev)
     t_next = np.asarray(t_next)
     cap = t_prev.shape[0]
-    nt = cap // block_next
-    tiles = 1
-    for i in range(nt):
-        blk = t_next[i * block_next:(i + 1) * block_next]
-        finite = blk[np.isfinite(blk)]
-        if finite.size == 0:
-            continue
-        lo_i = np.searchsorted(t_prev, finite.min() - t_high, side="left")
-        hi_i = np.searchsorted(t_prev, finite.max(), side="left")
-        span = int(hi_i - lo_i)
-        tiles = max(tiles, span // block_prev + 2)
-    return min(tiles, cap // block_prev)
+    lo_idx, hi_idx, has = (np.asarray(x) for x in _tile_spans(
+        t_prev, t_next, float(t_high), block_next, block_prev))
+    spans = np.where(has, hi_idx - lo_idx, 0)
+    tiles = int(np.max(spans // block_prev + 2, initial=1, where=has))
+    return min(max(tiles, 1), cap // block_prev)
+
+
+def required_window_tiles_batch(
+    times_by_sym: np.ndarray,   # f32[B, N, cap] sorted rows, +inf padded
+    t_high: np.ndarray,         # f32[B, N-1]
+    block_next: int, block_prev: int,
+) -> int:
+    """Batched :func:`required_window_tiles`: one static bound covering
+    every (episode, level) of a candidate batch — callers use it to pick a
+    ``window_tiles`` cap that keeps the fused kernel exact."""
+    times_by_sym = np.asarray(times_by_sym)
+    cap = times_by_sym.shape[-1]
+    lo_idx, hi_idx, has = (np.asarray(x) for x in _tile_spans(
+        times_by_sym[:, :-1], times_by_sym[:, 1:], np.asarray(t_high),
+        block_next, block_prev))
+    spans = np.where(has, hi_idx - lo_idx, 0)
+    tiles = int(np.max(spans // block_prev + 2, initial=1, where=has))
+    return min(max(tiles, 1), cap // block_prev)
+
+
+def window_span_exceeds(
+    lo_idx: jax.Array, hi_idx: jax.Array, cap: int,
+    block_prev: int, window_tiles: int,
+) -> jax.Array:
+    """THE conservative truncation predicate (span + one tile of
+    misalignment slack over the cap), shared by the per-level engine's
+    check and the fused precompute so their overflow flags cannot drift."""
+    span = jnp.clip(hi_idx - lo_idx, 0, cap)
+    return span // block_prev + 2 > window_tiles
+
+
+def window_truncated(
+    t_prev: jax.Array,   # f32[cap] sorted, +inf padded
+    t_next: jax.Array,   # f32[cap] sorted, +inf padded
+    t_high,
+    block_next: int, block_prev: int, window_tiles: int,
+) -> jax.Array:
+    """Traced per-level truncation flag: may any next tile's constraint
+    window span more than ``window_tiles`` prev tiles?"""
+    cap = t_prev.shape[-1]
+    lo_idx, hi_idx, _ = _tile_spans(
+        t_prev, t_next, t_high, block_next, block_prev)
+    return jnp.any(window_span_exceeds(
+        lo_idx, hi_idx, cap, block_prev, window_tiles))
+
+
+def window_scan_table(
+    times_by_sym: jax.Array,    # f32[B, N, cap] sorted rows, +inf padded
+    t_high: jax.Array,          # f32[B, N-1]
+    block_next: int,
+    block_prev: int,
+    window_tiles: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Traced per-(episode, level, next-tile) scan table for the fused kernel.
+
+    Returns ``(start_tile, num_tiles, truncated)``: the first prev tile and
+    exact tile count each next tile must scan (both ``i32[B, N-1, NT]``) and
+    a per-episode ``bool[B]`` truncation flag. With ``window_tiles > 0`` the
+    scan lengths are capped and any episode whose conservative span bound
+    (``span // BP + 2``, the same formula the per-level engine checks) may
+    exceed the cap is flagged — capping is *reported*, never silent.
+    """
+    cap = times_by_sym.shape[-1]
+    prev_tiles = cap // block_prev
+    lo_idx, hi_idx, has = _tile_spans(
+        times_by_sym[:, :-1], times_by_sym[:, 1:], t_high,
+        block_next, block_prev)
+    start = lo_idx // block_prev
+    end = (hi_idx + block_prev - 1) // block_prev
+    num = jnp.where(has, jnp.maximum(end - start, 0), 0)
+    if 0 < window_tiles < prev_tiles:
+        truncated = jnp.any(window_span_exceeds(
+            lo_idx, hi_idx, cap, block_prev, window_tiles), axis=(1, 2))
+        num = jnp.minimum(num, window_tiles)
+    else:
+        truncated = jnp.zeros((times_by_sym.shape[0],), bool)
+    start = jnp.clip(start, 0, max(prev_tiles - 1, 0))
+    return start.astype(jnp.int32), num.astype(jnp.int32), truncated
+
+
+# ---------------------------------------------------------------------------
+# Tile padding (replaces the old largest-divisor block-size degradation)
+# ---------------------------------------------------------------------------
+
+
+def tile_geometry(cap: int, block_next: int, block_prev: int) -> Tuple[int, int, int]:
+    """(bn, bp, padded_cap): the ONE tiling rule every Pallas tracking path
+    shares — blocks kept as requested, capacity rounded up to their lcm.
+    Padding with +inf times / -inf values is a max-accumulation no-op, so
+    tiling efficiency never degrades toward block size 1 for prime or odd
+    capacities. The truncation-flag parity between the ``dense_pallas`` and
+    ``dense_pallas_fused`` engines depends on this rule being
+    single-sourced (tracking._pallas_tile_geometry delegates here)."""
+    bn = max(1, block_next)
+    bp = max(1, block_prev)
+    tile = math.lcm(bn, bp)
+    pcap = ((cap + tile - 1) // tile) * tile
+    return bn, bp, pcap
+
+
+def _pad_tail(x: jax.Array, pcap: int, fill) -> jax.Array:
+    cap = x.shape[-1]
+    if pcap == cap:
+        return x
+    pad = jnp.full(x.shape[:-1] + (pcap - cap,), fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Per-level kernel wrapper
+# ---------------------------------------------------------------------------
 
 
 def track_level(
@@ -61,19 +234,13 @@ def track_level(
     if not use_kernel:
         return _ref.track_level_ref(t_prev, v_prev, t_next, t_low, t_high)
     cap = t_prev.shape[0]
-    bn = _largest_divisor_block(cap, block_next)
-    bp = _largest_divisor_block(cap, block_prev)
-    return _et.track_level_pallas(
-        t_prev, v_prev, t_next, t_low, t_high,
+    bn, bp, pcap = tile_geometry(cap, block_next, block_prev)
+    out = _et.track_level_pallas(
+        _pad_tail(t_prev, pcap, jnp.inf), _pad_tail(v_prev, pcap, NEG),
+        _pad_tail(t_next, pcap, jnp.inf), t_low, t_high,
         block_next=bn, block_prev=bp, window_tiles=window_tiles,
         interpret=interpret)
-
-
-def _largest_divisor_block(cap: int, want: int) -> int:
-    b = min(want, cap)
-    while cap % b:
-        b -= 1
-    return max(b, 1)
+    return out[:cap]
 
 
 def track_episode(
@@ -102,3 +269,66 @@ def track_episode(
     ends = times_by_sym[n - 1]
     valid = (v > NEG) & jnp.isfinite(ends)
     return jnp.where(valid, v, NEG), jnp.where(valid, ends, jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Fused batched multi-level wrapper
+# ---------------------------------------------------------------------------
+
+
+def track_batch(
+    times_by_sym: jax.Array,    # f32[B, N, cap] sorted rows, +inf padded
+    t_low: jax.Array,           # f32[B, N-1]
+    t_high: jax.Array,          # f32[B, N-1]
+    *,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Whole candidate batch, all levels, one fused Pallas launch.
+
+    Returns ``(starts f32[B, cap], n_superset i32[B], truncated bool[B])``.
+    ``starts`` holds the final-level latest-start values (-inf where no
+    occurrence ends at that event); validity masking against the last
+    symbol's times is the caller's (engine's) job, mirroring
+    ``track_episode``. ``window_tiles`` caps the per-tile scan length for a
+    latency bound — possible truncation is flagged, never silent.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    batch, n, cap = times_by_sym.shape
+    t0 = times_by_sym[:, 0, :]
+    if n == 1:  # no transitions: every first-symbol event is an occurrence
+        starts = jnp.where(jnp.isfinite(t0), t0, NEG)
+        nsup = jnp.sum(jnp.isfinite(t0), axis=-1).astype(jnp.int32)
+        return starts, nsup, jnp.zeros((batch,), bool)
+    bn, bp, pcap = tile_geometry(cap, block_next, block_prev)
+    padded = _pad_tail(times_by_sym, pcap, jnp.inf)
+    start_tile, num_tiles, truncated = window_scan_table(
+        padded, t_high, bn, bp, window_tiles)
+    t_low = jnp.asarray(t_low, jnp.float32)
+    t_high = jnp.asarray(t_high, jnp.float32)
+    chunk = _INTERPRET_BATCH_CHUNK
+    if interpret and batch > chunk:
+        nchunks = -(-batch // chunk)
+        pad_rows = nchunks * chunk - batch
+
+        def chunked(x, fill):
+            if pad_rows:   # all-padding rows scan zero tiles: a no-op
+                x = jnp.concatenate(
+                    [x, jnp.full((pad_rows,) + x.shape[1:], fill, x.dtype)])
+            return x.reshape((nchunks, chunk) + x.shape[1:])
+
+        starts, nsup = jax.lax.map(
+            lambda xs: _et.track_batch_pallas(
+                *xs, block_next=bn, block_prev=bp, interpret=True),
+            (chunked(padded, jnp.inf), chunked(t_low, 0), chunked(t_high, 0),
+             chunked(start_tile, 0), chunked(num_tiles, 0)))
+        starts = starts.reshape(nchunks * chunk, pcap)[:batch]
+        nsup = nsup.reshape(-1)[:batch]
+    else:
+        starts, nsup = _et.track_batch_pallas(
+            padded, t_low, t_high, start_tile, num_tiles,
+            block_next=bn, block_prev=bp, interpret=interpret)
+    return starts[:, :cap], nsup, truncated

@@ -46,6 +46,20 @@ def test_episode_track_windowed_scalar_prefetch():
     np.testing.assert_array_equal(want, got)
 
 
+@pytest.mark.parametrize("cap", [97, 127, 251, 300, 509])
+def test_episode_track_kernel_odd_caps(cap):
+    """Prime/odd capacities keep full-size blocks via tail padding (the old
+    largest-divisor fallback degraded block sizes toward 1)."""
+    rng = np.random.default_rng(cap)
+    t_prev, v_prev, t_next = _level_case(rng, cap)
+    want = np.asarray(ref.track_level_ref(t_prev, v_prev, t_next, 0.5, 4.0))
+    got = np.asarray(ops.track_level(
+        t_prev, v_prev, t_next, 0.5, 4.0,
+        block_next=128, block_prev=128, interpret=True))
+    assert got.shape == (cap,)
+    np.testing.assert_array_equal(want, got)
+
+
 @pytest.mark.parametrize("frac", [0.0, 0.1, 1.0])
 def test_episode_track_padding_extremes(frac):
     rng = np.random.default_rng(3)

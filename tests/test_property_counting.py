@@ -32,7 +32,7 @@ def episodes(draw, n_types=4):
     return serial(syms, lo, lo + width)
 
 
-@pytest.mark.parametrize("engine", ["dense", "dense_pallas"])
+@pytest.mark.parametrize("engine", ["dense", "dense_pallas", "dense_pallas_fused"])
 @settings(max_examples=40, deadline=None)
 @given(s=streams(), ep=episodes())
 def test_dense_matches_fsm_oracle(engine, s, ep):
