@@ -1,0 +1,88 @@
+"""Generate tests/data/golden_stream.npz — the end-to-end mining fixture.
+
+A small simulated spike train (data/spikes.py network model, two planted
+cascades) plus the exact per-level frequent-episode sets the miner must
+recover. The fixture is CHECKED IN; regenerating it (after an intentional
+miner-semantics change) is:
+
+    PYTHONPATH=src python scripts/make_golden_stream.py
+
+The stored levels are produced by the reference ``dense`` engine and
+sanity-checked here: the planted cascades' prefixes must appear at the
+deepest level, and every stored count must be reproduced by the numpy FSM
+oracle — so the fixture can never encode an engine bug as truth.
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import MinerConfig, count_fsm_numpy, mine_arrays  # noqa: E402
+from repro.core.episodes import episodes_from_rows  # noqa: E402
+from repro.data.spikes import NetworkConfig, embedded_episodes, simulate  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "data",
+                   "golden_stream.npz")
+
+NET = NetworkConfig(n_neurons=12, episode_len=5, n_embedded=2,
+                    base_rate=2.0, trigger_hz=3.0, seed=7)
+DURATION_S = 4.0
+MINER = dict(t_low=0.0, t_high=2 * NET.delay_high, threshold=7, max_level=4,
+             max_candidates=2048)
+
+
+def main() -> None:
+    stream = simulate(NET, DURATION_S)
+    planted = embedded_episodes(NET)
+    cfg = MinerConfig(**MINER, engine="dense")
+    res = mine_arrays(stream, cfg)
+
+    # sanity 1: the planted cascades' prefixes are recovered at max level
+    deepest = max(res)
+    assert deepest >= 3, f"fixture too shallow: deepest level {deepest}"
+    found = {tuple(int(x) for x in row) for row in res[deepest].symbols}
+    hits = [p for p in planted if p.symbols[:deepest] in found]
+    assert hits, f"no planted episode recovered at level {deepest}"
+
+    # sanity 2: every stored count reproduces on the serial FSM oracle
+    types = np.asarray(stream.types)
+    times = np.asarray(stream.times)
+    for lvl, la in res.items():
+        if lvl == 1:
+            binc = np.bincount(types, minlength=stream.n_types)
+            np.testing.assert_array_equal(la.counts, binc[la.symbols[:, 0]])
+            continue
+        for row, count in zip(
+                episodes_from_rows(la.symbols, cfg.t_low, cfg.t_high),
+                la.counts):
+            assert count_fsm_numpy(types, times, row) == int(count), row
+
+    payload = {
+        "types": types.astype(np.int32),
+        "times": times.astype(np.float32),
+        "n_types": np.int32(stream.n_types),
+        "t_low": np.float32(cfg.t_low),
+        "t_high": np.float32(cfg.t_high),
+        "threshold": np.int32(cfg.threshold),
+        "max_level": np.int32(cfg.max_level),
+        "max_candidates": np.int32(cfg.max_candidates),
+        "levels": np.asarray(sorted(res), np.int32),
+        "planted_symbols": np.asarray(
+            [p.symbols for p in planted], np.int32),
+    }
+    for lvl, la in res.items():
+        payload[f"level{lvl}_symbols"] = la.symbols.astype(np.int32)
+        payload[f"level{lvl}_counts"] = np.asarray(la.counts, np.int32)
+        payload[f"level{lvl}_n_candidates"] = np.int32(la.n_candidates)
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    np.savez(OUT, **payload)
+    sizes = {lvl: int(res[lvl].symbols.shape[0]) for lvl in sorted(res)}
+    print(f"wrote {os.path.relpath(OUT)}: {stream.n_events} events, "
+          f"levels {sizes}, planted hit: {hits[0].symbols[:deepest]}")
+
+
+if __name__ == "__main__":
+    main()

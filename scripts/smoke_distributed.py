@@ -20,8 +20,8 @@ for trial in range(4):
     ty_s, tm_s = shard_stream(types, times, 4)
     t0 = time.time()
     fn = make_count_sharded_jit(ep, mesh, n_types=n_types, halo=120)
-    got, short = fn(ty_s, tm_s)
-    ok = int(got) == want and not bool(short)
+    got, short, overflow = fn(ty_s, tm_s)
+    ok = int(got) == want and not bool(short) and not bool(overflow)
     print(f"[{trial}] got={int(got)} want={want} short={bool(short)} {time.time()-t0:.1f}s")
     if not ok:
         fails += 1

@@ -15,6 +15,38 @@ else:  # older jax (< 0.6)
     from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
 
 
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication checker disabled.
+
+    Needed when the body contains a ``pallas_call``: the checker has no
+    replication rule for it ("No replication rule for pallas_call"). The
+    disabling kwarg moved across jax releases (``check_rep`` ->
+    ``check_vma``), and the newest versions may drop it entirely once the
+    rule exists — pick by signature so a genuine TypeError from shard_map
+    itself (bad specs, bad mesh) propagates instead of being swallowed.
+    """
+    import inspect
+
+    try:
+        params = inspect.signature(shard_map).parameters
+    except (TypeError, ValueError):      # C-accelerated / wrapped callable
+        params = None
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if params is not None:
+        for name in ("check_rep", "check_vma"):
+            if name in params:
+                kwargs[name] = False
+                break
+        return shard_map(f, **kwargs)
+    # signature unavailable: probe, but re-raise the bare call's real error
+    for name in ("check_rep", "check_vma"):
+        try:
+            return shard_map(f, **kwargs, **{name: False})
+        except TypeError:
+            continue
+    return shard_map(f, **kwargs)
+
+
 def pcast_varying(x, axes):
     """Mark ``x`` as varying over manual ``axes`` inside shard_map.
 
@@ -37,4 +69,4 @@ def axis_size(axis_name):
     return jax.lax.psum(1, axis_name)
 
 
-__all__ = ["shard_map", "pcast_varying", "axis_size"]
+__all__ = ["shard_map", "shard_map_unchecked", "pcast_varying", "axis_size"]

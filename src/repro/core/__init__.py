@@ -6,12 +6,15 @@ from .events import EventStream, from_arrays, type_index, episode_symbol_times
 from .counting import (CountResult, count_batch, count_batch_indexed,
                        count_nonoverlapped, count_occurrences)
 from .mining import (MinerConfig, LevelResult, LevelArrays, mine, mine_arrays,
-                     generate_candidates, generate_candidates_arrays)
+                     mine_sharded, generate_candidates,
+                     generate_candidates_arrays)
 from .tracking import (TrackingEngine, EngineConfig, register_engine,
                        get_engine, engine_names)
 from .statemachine import count_fsm_numpy, count_fsm_scan, greedy_numpy, count_all_occurrences_numpy
 from .mapconcat import count_mapconcat
-from .distributed import count_sharded, shard_stream
+from .distributed import (ShardedIndex, build_sharded_index, count_sharded,
+                          count_sharded_batch, count_sharded_batch_indexed,
+                          shard_stream)
 from . import compaction, scheduling, tracking, telemetry
 
 
@@ -28,10 +31,11 @@ __all__ = [
     "CountResult", "count_batch", "count_batch_indexed", "count_nonoverlapped",
     "count_occurrences", "ENGINES",
     "MinerConfig", "LevelResult", "LevelArrays", "mine", "mine_arrays",
-    "generate_candidates", "generate_candidates_arrays",
+    "mine_sharded", "generate_candidates", "generate_candidates_arrays",
     "TrackingEngine", "EngineConfig", "register_engine", "get_engine",
     "engine_names",
     "count_fsm_numpy", "count_fsm_scan", "greedy_numpy", "count_all_occurrences_numpy",
-    "count_mapconcat", "count_sharded", "shard_stream",
+    "count_mapconcat", "ShardedIndex", "build_sharded_index", "count_sharded",
+    "count_sharded_batch", "count_sharded_batch_indexed", "shard_stream",
     "compaction", "scheduling", "tracking", "telemetry",
 ]

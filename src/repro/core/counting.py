@@ -136,41 +136,26 @@ def count_batch_indexed(
     level — the paper's pre-processing amortization extended across the
     whole level-wise search. Returns (counts[B], n_superset[B], overflow[B]).
 
-    Engines exposing the optional natively-batched ``track_batch`` protocol
-    method (see tracking.TrackingEngine) receive the whole batch in one
-    call — one fused kernel launch per mining level instead of ``B x (N-1)``
-    vmapped per-level launches; everything else takes the vmapped path.
+    Batched tracking goes through :func:`tracking.track_batch_dispatch`:
+    engines exposing the natively-batched ``track_batch`` protocol method
+    (see tracking.TrackingEngine) receive the whole batch in one call — one
+    fused kernel launch per mining level instead of ``B x (N-1)`` vmapped
+    per-level launches; everything else takes the vmapped path.
     """
     cap = table.shape[1]
     index_overflow = jnp.any(counts > cap)
-    eng = tracking.get_engine(engine)
-    track_batch = getattr(eng, "track_batch", None)
+    cfg = tracking.EngineConfig(
+        cap_occ=cap_occ, max_window=max_window, block_next=block_next,
+        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)
+    occ = tracking.track_batch_dispatch(engine, table[symbols], t_low, t_high, cfg)
 
-    if track_batch is not None:
-        cfg = tracking.EngineConfig(
-            cap_occ=cap_occ, max_window=max_window, block_next=block_next,
-            block_prev=block_prev, window_tiles=window_tiles,
-            interpret=interpret)
-        occ = track_batch(table[symbols], t_low, t_high, cfg)
+    def schedule(starts, ends, valid):
+        one = tracking.Occurrences(
+            starts, ends, valid, jnp.int32(0), jnp.bool_(False))
+        return scheduling.greedy_count(one, parallel=parallel_schedule)
 
-        def schedule(starts, ends, valid):
-            one = tracking.Occurrences(
-                starts, ends, valid, jnp.int32(0), jnp.bool_(False))
-            return scheduling.greedy_count(one, parallel=parallel_schedule)
-
-        batch_counts = jax.vmap(schedule)(occ.starts, occ.ends, occ.valid)
-        return batch_counts, occ.n_superset, occ.overflow | index_overflow
-
-    def one(sym, lo, hi):
-        tbs = table[sym]
-        r = count_occurrences(
-            tbs, lo, hi, engine=engine, cap_occ=cap_occ,
-            max_window=max_window, parallel_schedule=parallel_schedule,
-            block_next=block_next, block_prev=block_prev,
-            window_tiles=window_tiles, interpret=interpret)
-        return r.count, r.n_superset, r.overflow | index_overflow
-
-    return jax.vmap(one)(symbols, t_low, t_high)
+    batch_counts = jax.vmap(schedule)(occ.starts, occ.ends, occ.valid)
+    return batch_counts, occ.n_superset, occ.overflow | index_overflow
 
 
 @functools.partial(

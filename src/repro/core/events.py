@@ -79,9 +79,16 @@ def type_index(
         are dropped (callers size ``cap`` from data; ``counts`` reports the
         true totals so overflow is detectable).
       counts: int32[n_types] true per-type event counts (pre-clip).
+
+    Negative type ids are padding (the sharded stream convention, -1) and
+    contribute nothing. They must be remapped before the scatters because
+    jax scatter indices *wrap* (numpy semantics): a raw ``-1`` would land in
+    row ``n_types - 1``, inflating its count and racing +inf writes against
+    that type's real times.
     """
     types = jnp.asarray(types, jnp.int32)
     times = jnp.asarray(times, jnp.float32)
+    types = jnp.where(types < 0, n_types, types)   # out of bounds -> dropped
     counts = jnp.zeros((n_types,), jnp.int32).at[types].add(1, mode="drop")
     # Stable grouping: rank of each event within its own type.
     onehot_free_rank = _rank_within_type(types, n_types)

@@ -35,8 +35,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
-from . import counting
+from . import counting, distributed
 from . import events as events_lib
 from .episodes import Episode, episode_batch, episodes_from_rows
 from .events import EventStream
@@ -62,6 +63,13 @@ class MinerConfig:
     block_prev: int = 256
     window_tiles: int = 0        # 0 = exact full-window coverage
     interpret: Optional[bool] = None  # None = interpret off-TPU
+    # multi-device sharding: give a mesh and mine()/mine_arrays() dispatch
+    # to mine_sharded (stream sharded over `shard_axis`, every level's
+    # candidate batch tracked inside shard_map; see core/distributed.py)
+    mesh: Optional[Mesh] = None
+    shard_axis: str = "data"
+    n_shards: Optional[int] = None   # default: mesh axis size
+    halo: int = 256              # events of right-neighbor lookahead per shard
 
 
 @dataclasses.dataclass
@@ -187,6 +195,70 @@ def count_candidates(
     return counts
 
 
+_OVERFLOW_MSG = (
+    "episode counting overflowed static capacity or truncated a "
+    "constraint window; raise cap/cap_occ/max_window/window_tiles")
+
+
+def _padded_level_batch(frequent: np.ndarray, level: int, cfg: MinerConfig):
+    """Join + pad one level's candidates: returns ``(cands, sym, lo, hi)``
+    where ``sym`` is padded to a MAX_BATCH_PAD multiple (or ``None`` when
+    the join is empty) and lo/hi are the broadcast uniform windows."""
+    cands = generate_candidates_arrays(frequent, level, cfg)
+    b = cands.shape[0]
+    if b == 0:
+        return cands, None, None, None
+    bp = _pad_to(b)
+    sym = np.concatenate([cands, np.broadcast_to(cands[:1], (bp - b, level))])
+    lo = jnp.full((bp, level - 1), cfg.t_low, jnp.float32)
+    hi = jnp.full((bp, level - 1), cfg.t_high, jnp.float32)
+    return cands, jnp.asarray(sym), lo, hi
+
+
+def _prune_level(frequent_types: np.ndarray, counts: np.ndarray,
+                 n_types: int) -> LevelArrays:
+    """Level-1 result from the per-type counts and a frequency threshold."""
+    return LevelArrays(frequent_types[:, None],
+                       counts[frequent_types].astype(np.int32), n_types)
+
+
+def _mine_levels(cfg: MinerConfig, level1: LevelArrays,
+                 count_level) -> Dict[int, LevelArrays]:
+    """The Apriori level loop shared by the local and sharded miners.
+
+    ``count_level(sym, lo, hi) -> (counts_dev, checks)`` counts one padded
+    candidate batch on device; ``checks`` is a list of ``(message,
+    flags_dev[B])`` pairs raised on when any flag is set. Each level pays
+    exactly ONE host sync: counts, keep mask, and every check flag come
+    back in a single ``device_get``.
+    """
+    results = {1: level1}
+    frequent = level1.symbols
+    for level in range(2, cfg.max_level + 1):
+        if frequent.shape[0] == 0:
+            break
+        cands, sym, lo, hi = _padded_level_batch(frequent, level, cfg)
+        b = cands.shape[0]
+        if b == 0:
+            results[level] = LevelArrays(
+                np.zeros((0, level), np.int32), np.zeros((0,), np.int32), 0)
+            break
+        thr = (cfg.level_thresholds or {}).get(level, cfg.threshold)
+        counts_dev, checks = count_level(sym, lo, hi)
+        keep_dev = counts_dev >= jnp.int32(thr)             # pruned on device
+        fetched = jax.device_get(                           # ONE sync per level
+            (counts_dev[:b], keep_dev[:b])
+            + tuple(flags[:b] for _, flags in checks))
+        counts_h, keep_h = fetched[0], fetched[1]
+        for (message, _), flags_h in zip(checks, fetched[2:]):
+            if bool(np.any(flags_h)):
+                raise RuntimeError(message)
+        frequent = cands[keep_h]
+        results[level] = LevelArrays(
+            frequent, np.asarray(counts_h)[keep_h].astype(np.int32), b)
+    return results
+
+
 def mine_arrays(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelArrays]:
     """Device-resident level-wise mining; returns per-level symbol arrays.
 
@@ -195,50 +267,75 @@ def mine_arrays(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelArrays]
     overflow in a single ``device_get``). The candidate join runs on host
     over compact int32 arrays — it is O(B) numpy work between device
     launches, never per-episode Python.
+
+    With ``cfg.mesh`` set, the same search runs sharded over the mesh via
+    :func:`mine_sharded` (identical results, differentially tested).
     """
+    if cfg.mesh is not None:
+        return mine_sharded(stream, cfg)
     cap = cfg.cap or max(1, stream.n_events)
     table, type_counts = events_lib.type_index(
         stream.types, stream.times, stream.n_types, cap)   # built ONCE
 
-    results: Dict[int, LevelArrays] = {}
-
     # level 1: single-type episodes; count = per-type event count
     binc = np.asarray(type_counts)                          # level-1 host sync
     freq_types = np.nonzero(binc >= cfg.threshold)[0].astype(np.int32)
-    frequent = freq_types[:, None]                          # i32[F, 1]
-    results[1] = LevelArrays(frequent, binc[freq_types], stream.n_types)
 
-    for level in range(2, cfg.max_level + 1):
-        if frequent.shape[0] == 0:
-            break
-        cands = generate_candidates_arrays(frequent, level, cfg)
-        b = cands.shape[0]
-        if b == 0:
-            results[level] = LevelArrays(
-                np.zeros((0, level), np.int32), np.zeros((0,), np.int32), 0)
-            break
-        bp = _pad_to(b)
-        sym = np.concatenate([cands, np.broadcast_to(cands[:1], (bp - b, level))])
-        lo = jnp.full((bp, level - 1), cfg.t_low, jnp.float32)
-        hi = jnp.full((bp, level - 1), cfg.t_high, jnp.float32)
-        thr = (cfg.level_thresholds or {}).get(level, cfg.threshold)
+    def count_level(sym, lo, hi):
         counts_dev, _, overflow = counting.count_batch_indexed(
-            table, type_counts, jnp.asarray(sym), lo, hi,
+            table, type_counts, sym, lo, hi,
             engine=cfg.engine, cap_occ=cfg.cap_occ, max_window=cfg.max_window,
             parallel_schedule=cfg.parallel_schedule,
             block_next=cfg.block_next, block_prev=cfg.block_prev,
             window_tiles=cfg.window_tiles, interpret=cfg.interpret)
-        keep_dev = counts_dev >= jnp.int32(thr)             # pruned on device
-        counts_h, keep_h, ovf_h = jax.device_get(           # ONE sync per level
-            (counts_dev[:b], keep_dev[:b], overflow[:b]))
-        if bool(np.any(ovf_h)):
-            raise RuntimeError(
-                "episode counting overflowed static capacity or truncated a "
-                "constraint window; raise cap/cap_occ/max_window/window_tiles")
-        frequent = cands[keep_h]
-        results[level] = LevelArrays(
-            frequent, np.asarray(counts_h)[keep_h].astype(np.int32), b)
-    return results
+        return counts_dev, [(_OVERFLOW_MSG, overflow)]
+
+    return _mine_levels(
+        cfg, _prune_level(freq_types, binc, stream.n_types), count_level)
+
+
+def mine_sharded(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelArrays]:
+    """Multi-device level-wise mining on a stream sharded over ``cfg.mesh``.
+
+    The stream is sharded ONCE (halo exchange + per-shard type index in a
+    single shard_map pass, :func:`distributed.build_sharded_index`); every
+    level then runs its whole candidate batch through the configured
+    tracking engine inside shard_map with a cross-shard greedy merge and
+    device-side pruning — still exactly one host sync per level, fetching
+    (counts, keep mask, halo flags, overflow) in a single ``device_get``.
+
+    Results are identical to :func:`mine_arrays` on the unsharded stream
+    (differentially tested); inadequate halo or capacity is raised, never a
+    silent undercount.
+    """
+    if cfg.mesh is None:
+        raise ValueError("mine_sharded requires cfg.mesh")
+    n_shards = cfg.n_shards or cfg.mesh.shape[cfg.shard_axis]
+    ty, tm = distributed.shard_stream(stream.types, stream.times, n_shards)
+    index = distributed.build_sharded_index(
+        jnp.asarray(ty), jnp.asarray(tm), cfg.mesh, axis=cfg.shard_axis,
+        n_types=stream.n_types, halo=cfg.halo)
+
+    binc = np.asarray(index.global_type_counts)             # level-1 host sync
+    freq_types = np.nonzero(binc >= cfg.threshold)[0].astype(np.int32)
+    halo_msg = ("halo too short for the candidate episodes' max_span; "
+                f"raise MinerConfig.halo (got {index.halo} events of "
+                "lookahead per shard)")
+
+    def count_level(sym, lo, hi):
+        counts_dev, _, short_dev, overflow_dev = (
+            distributed.count_sharded_batch_indexed(
+                index, sym, lo, hi,
+                engine=cfg.engine, cap_occ=cfg.cap_occ,
+                max_window=cfg.max_window,
+                parallel_schedule=cfg.parallel_schedule,
+                block_next=cfg.block_next, block_prev=cfg.block_prev,
+                window_tiles=cfg.window_tiles, interpret=cfg.interpret))
+        return counts_dev, [(_OVERFLOW_MSG, overflow_dev),
+                            (halo_msg, short_dev)]
+
+    return _mine_levels(
+        cfg, _prune_level(freq_types, binc, stream.n_types), count_level)
 
 
 def mine(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelResult]:

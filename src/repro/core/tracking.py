@@ -310,6 +310,33 @@ def engine_names() -> Tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
+def track_batch_dispatch(
+    engine,                    # str name or TrackingEngine
+    times_by_sym: jax.Array,   # f32[B, N, cap] sorted rows, +inf padded
+    t_low: jax.Array,          # f32[B, N-1]
+    t_high: jax.Array,         # f32[B, N-1]
+    cfg: EngineConfig,
+) -> Occurrences:
+    """Batch-leading tracking through any engine.
+
+    Engines exposing the native ``track_batch`` protocol method get the
+    whole batch in one call (the fused-kernel fast path); everything else is
+    vmapped over its per-episode ``track``. This is the ONE place batched
+    dispatch lives — ``counting.count_batch_indexed`` and the sharded
+    counters in ``core/distributed.py`` both route through it, so an engine
+    gains multi-device support by registering, nothing more.
+
+    Returns batch-leading Occurrences: ``starts/ends/valid`` are
+    ``[B, cap]``, ``n_superset``/``overflow`` are ``[B]``.
+    """
+    eng = get_engine(engine) if isinstance(engine, str) else engine
+    track_batch = getattr(eng, "track_batch", None)
+    if track_batch is not None:
+        return track_batch(times_by_sym, t_low, t_high, cfg)
+    return jax.vmap(lambda t, lo, hi: eng.track(t, lo, hi, cfg))(
+        times_by_sym, t_low, t_high)
+
+
 @dataclasses.dataclass(frozen=True)
 class DenseEngine:
     """Beyond-paper windowed range-max tracking (no compaction at all)."""

@@ -1,0 +1,272 @@
+"""Subprocess child for the sharded differential suite.
+
+jax locks the host-platform device count at first init, so everything that
+needs 8 simulated devices runs here, spawned by tests/test_sharded_mining.py
+(and tests/test_golden_mining.py) with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``. Prints ``OK ...`` on
+success; any assertion failure propagates as a nonzero exit.
+
+Modes:
+  differential  hypothesis sweep: mine_sharded == mine_arrays (symbols,
+                counts, candidate totals) for one engine across shard
+                counts {1, 2, 8} on prime-length shards with duplicate
+                timestamps
+  straddle      same equality on streams whose occurrences straddle >= 3
+                shards (multi-hop halo exactness)
+  halo          fixed adversarial regressions: boundary-timestamp-tie
+                ownership, the halo_end - boundary == span duplicate edge
+                (flagged, never a silent undercount), per-episode flags in
+                the batched path, >= 3-shard straddle
+  golden        mine_sharded on the checked-in golden fixture equals the
+                stored per-level frequent sets exactly
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))   # for `import strategies`
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def _meshes():
+    from repro.launch.mesh import make_mesh
+    return {k: make_mesh((k,), ("data",)) for k in (1, 2, 8)}
+
+
+def _engine_kwargs(engine, n_events):
+    kw = dict(engine=engine)
+    if engine == "count_scan_write":
+        # generous static buffers so overflow stays rare on random streams
+        kw.update(cap_occ=16 * max(n_events, 8), max_window=128)
+    return kw
+
+
+def _assert_levels_equal(base, got, ctx):
+    assert base.keys() == got.keys(), (ctx, sorted(base), sorted(got))
+    for lvl in base:
+        np.testing.assert_array_equal(
+            base[lvl].symbols, got[lvl].symbols, err_msg=f"{ctx} level {lvl}")
+        np.testing.assert_array_equal(
+            base[lvl].counts, got[lvl].counts, err_msg=f"{ctx} level {lvl}")
+        assert base[lvl].n_candidates == got[lvl].n_candidates, (ctx, lvl)
+
+
+def _foreach_seed(body, examples: int) -> None:
+    """Run ``body(seed)`` on ``examples`` cases: hypothesis-driven (with
+    shrinking) when the package is installed, a plain seeded loop when not
+    — the same builders shape the cases either way."""
+    import strategies as sts
+    if sts.HAVE_HYPOTHESIS:
+        from hypothesis import HealthCheck, given, settings
+
+        @settings(max_examples=examples, deadline=None, database=None,
+                  derandomize=True, suppress_health_check=list(HealthCheck))
+        @given(seed=sts.seeds())
+        def check(seed):
+            body(seed)
+
+        check()
+    else:
+        for seed in range(examples):
+            body(seed)
+
+
+def run_differential(engine: str, examples: int) -> None:
+    import strategies as sts
+    from repro.core import MinerConfig, mine_arrays
+
+    meshes = _meshes()
+    ran = {"n": 0}
+
+    def body(seed):
+        stream, n_shards, t_high, threshold = sts.make_sharded_case(seed)
+        kw = dict(t_low=0.0, t_high=t_high, threshold=threshold, max_level=3,
+                  **_engine_kwargs(engine, stream.n_events))
+        base_err = got_err = None
+        try:
+            base = mine_arrays(stream, MinerConfig(**kw))
+        except RuntimeError as e:
+            base_err = str(e)
+        try:
+            got = mine_arrays(stream, MinerConfig(
+                **kw, mesh=meshes[n_shards], n_shards=n_shards,
+                halo=stream.n_events))   # full halo: exactness guaranteed
+        except RuntimeError as e:
+            got_err = str(e)
+        if base_err or got_err:
+            # capacity profiles differ across layouts, so a static-capacity
+            # overflow may legitimately fire on one side only; what is
+            # forbidden is a *silent* divergence, and mining raises on every
+            # flag, so reaching here at all is the contract holding
+            assert "overflow" in (base_err or got_err), (base_err, got_err)
+            return
+        _assert_levels_equal(base, got, (engine, n_shards, seed))
+        ran["n"] += 1
+
+    _foreach_seed(body, examples)
+    print(f"OK differential engine={engine} examples={examples} "
+          f"compared={ran['n']}")
+
+
+def run_straddle(examples: int) -> None:
+    import strategies as sts
+    from repro.core import MinerConfig, mine_arrays
+
+    mesh8 = _meshes()[8]
+    ran = {"n": 0}
+
+    def body(seed):
+        stream, n_shards, t_high, threshold = sts.make_straddling_case(seed)
+        engine = ("dense", "dense_pallas_fused")[seed % 2]
+        kw = dict(t_low=0.0, t_high=t_high, threshold=threshold, max_level=3,
+                  engine=engine)
+        base = mine_arrays(stream, MinerConfig(**kw))
+        got = mine_arrays(stream, MinerConfig(
+            **kw, mesh=mesh8, n_shards=n_shards, halo=stream.n_events))
+        _assert_levels_equal(base, got, ("straddle", engine, seed))
+        ran["n"] += 1
+
+    _foreach_seed(body, examples)
+    print(f"OK straddle examples={examples} compared={ran['n']}")
+
+
+def run_halo() -> None:
+    from repro.core import MinerConfig, count_fsm_numpy, mine_arrays, serial
+    from repro.core.distributed import (build_sharded_index, count_sharded,
+                                        count_sharded_batch_indexed)
+    from repro.launch.mesh import make_mesh
+
+    mesh2 = make_mesh((2,), ("data",))
+
+    # 1) boundary-timestamp tie: A is shard0's LAST event and shares its
+    #    timestamp with shard1's first event; shard1 never sees A, so the
+    #    old strict `start < boundary` ownership dropped the occurrence
+    types = np.asarray([2, 2, 2, 0, 2, 1, 2, 2], np.int32)   # A=0, B=1
+    times = np.asarray([0, 1, 2, 3, 3, 4, 5, 6], np.float32)
+    ep = serial([0, 1], 0.0, 1.5)
+    want = count_fsm_numpy(types, times, ep)
+    assert want == 1
+    ty, tm = types.reshape(2, 4), times.reshape(2, 4)
+    got, short, ovf = count_sharded(
+        jnp.asarray(ty), jnp.asarray(tm), ep, mesh2, n_types=3, halo=4)
+    assert int(got) == want and not bool(short) and not bool(ovf), (
+        int(got), want, bool(short))
+
+    # 2) halo_end - boundary == span exactly, and the needed B event is a
+    #    duplicate timestamp at halo_end just PAST the halo: an undercount
+    #    unless flagged (the old `< span` check let it through silently)
+    types = np.asarray([2, 2, 2, 0, 2, 2, 1, 2], np.int32)
+    times = np.asarray([2, 3, 4, 5, 5, 7, 7, 9], np.float32)
+    ep = serial([0, 1], 0.0, 2.0)
+    want = count_fsm_numpy(types, times, ep)
+    assert want == 1
+    ty, tm = types.reshape(2, 4), times.reshape(2, 4)
+    got, short, ovf = count_sharded(
+        jnp.asarray(ty), jnp.asarray(tm), ep, mesh2, n_types=3, halo=2)
+    assert bool(short), "must flag: needed event sits at exactly halo_end"
+    got, short, ovf = count_sharded(
+        jnp.asarray(ty), jnp.asarray(tm), ep, mesh2, n_types=3, halo=4)
+    assert int(got) == want and not bool(short)
+
+    # 3) per-episode flags in the batched path: same stream and halo, one
+    #    episode whose span fits the halo and one whose span does not
+    index = build_sharded_index(
+        jnp.asarray(ty), jnp.asarray(tm), mesh2, n_types=3, halo=2)
+    sym = jnp.asarray([[0, 1], [0, 1]], jnp.int32)
+    lo = jnp.zeros((2, 1), jnp.float32)
+    hi = jnp.asarray([[0.5], [2.0]], jnp.float32)
+    counts, _, short_b, ovf_b = count_sharded_batch_indexed(index, sym, lo, hi)
+    short_b = np.asarray(short_b)
+    assert not short_b[0] and short_b[1], short_b
+
+    # 4) the miner surfaces the flag instead of silently undercounting
+    from repro.core.events import EventStream
+    stream = EventStream(types, times, 3)
+    cfg = MinerConfig(t_low=0.0, t_high=2.0, threshold=1, max_level=2,
+                      mesh=mesh2, n_shards=2, halo=2)
+    try:
+        mine_arrays(stream, cfg)
+    except RuntimeError as e:
+        assert "halo" in str(e), e
+    else:
+        raise AssertionError("mine_sharded must raise on halo_short")
+
+    # 5) halo=0 on a multi-shard mesh: a boundary-straddling occurrence is
+    #    invisible, so the flag must fire (halo is clamped up to 1 neighbor
+    #    event exactly so the adequacy check has something to observe)
+    types = np.asarray([2, 2, 2, 0, 1, 2, 2, 2], np.int32)
+    times = np.asarray([0, 1, 2, 3, 4, 5, 6, 7], np.float32)
+    ep = serial([0, 1], 0.0, 1.5)
+    assert count_fsm_numpy(types, times, ep) == 1
+    ty, tm = types.reshape(2, 4), times.reshape(2, 4)
+    got, short, ovf = count_sharded(
+        jnp.asarray(ty), jnp.asarray(tm), ep, mesh2, n_types=3, halo=0)
+    assert bool(short), "halo=0 with 2 shards must flag, never silently drop"
+
+    # 6) occurrences straddling >= 3 shards are exact via the multi-hop halo
+    mesh8 = make_mesh((8,), ("data",))
+    rng = np.random.default_rng(0)
+    n = 24
+    times = np.cumsum(rng.uniform(0.1, 0.5, n)).astype(np.float32)
+    types = rng.integers(0, 3, n).astype(np.int32)
+    ep = serial([0, 1, 0], 0.0, float(times[-1]))
+    want = count_fsm_numpy(types, times, ep)
+    ty, tm = types.reshape(8, 3), times.reshape(8, 3)
+    got, short, ovf = count_sharded(
+        jnp.asarray(ty), jnp.asarray(tm), ep, mesh8, n_types=3, halo=21)
+    assert int(got) == want and not bool(short) and not bool(ovf)
+
+    print("OK halo")
+
+
+def run_golden(path: str) -> None:
+    from repro.core import MinerConfig, mine_arrays
+    from repro.core.events import EventStream
+    from repro.launch.mesh import make_mesh
+
+    data = np.load(path)
+    stream = EventStream(data["types"], data["times"], int(data["n_types"]))
+    mesh8 = make_mesh((8,), ("data",))
+    for engine in ("dense", "dense_pallas_fused"):
+        cfg = MinerConfig(
+            t_low=float(data["t_low"]), t_high=float(data["t_high"]),
+            threshold=int(data["threshold"]), max_level=int(data["max_level"]),
+            max_candidates=int(data["max_candidates"]), engine=engine,
+            mesh=mesh8, n_shards=8, halo=stream.n_events)
+        got = mine_arrays(stream, cfg)
+        levels = [int(l) for l in data["levels"]]
+        assert sorted(got) == levels, (engine, sorted(got), levels)
+        for lvl in levels:
+            np.testing.assert_array_equal(
+                got[lvl].symbols, data[f"level{lvl}_symbols"],
+                err_msg=f"{engine} level {lvl}")
+            np.testing.assert_array_equal(
+                got[lvl].counts, data[f"level{lvl}_counts"],
+                err_msg=f"{engine} level {lvl}")
+    print("OK golden")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("mode", choices=("differential", "straddle", "halo",
+                                     "golden"))
+    ap.add_argument("--engine", default="dense")
+    ap.add_argument("--examples", type=int, default=25)
+    ap.add_argument("--golden-path",
+                    default=os.path.join(os.path.dirname(__file__), "data",
+                                         "golden_stream.npz"))
+    args = ap.parse_args()
+    if args.mode == "differential":
+        run_differential(args.engine, args.examples)
+    elif args.mode == "straddle":
+        run_straddle(args.examples)
+    elif args.mode == "halo":
+        run_halo()
+    else:
+        run_golden(args.golden_path)
+
+
+if __name__ == "__main__":
+    main()

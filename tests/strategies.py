@@ -1,0 +1,142 @@
+"""Shared generators + hypothesis strategies for the property suites.
+
+One home for the case generators every property file previously rolled on
+its own: random event streams (zero-width gaps produce DUPLICATE
+timestamps — the boundary-tie adversary of the sharded ownership rule),
+serial episodes with shared or per-gap windows, equal-length episode
+batches, and sharded layouts (prime shard lengths so no tiling or padding
+path gets a round number to hide behind).
+
+The sharded-case builders (:func:`make_sharded_case`,
+:func:`make_straddling_case`) are plain seeded functions so the
+differential child process works without hypothesis installed; the
+hypothesis composites below wrap them (drawing the seed) when the package
+is available, so CI gets shrinking on top of the same distribution.
+
+Import as ``import strategies`` (pytest puts each test file's directory on
+``sys.path``); subprocess children add ``tests/`` to ``sys.path`` by hand.
+"""
+import numpy as np
+
+from repro.core.episodes import Episode, serial
+from repro.core.events import EventStream
+
+# shard lengths that are prime (and the shard counts the differential suite
+# sweeps): nothing divides evenly, so halo clamping, tail padding, and tile
+# rounding all get exercised
+PRIME_SHARD_LENS = (2, 3, 5, 7, 11, 13)
+SHARD_COUNTS = (1, 2, 8)
+
+
+def _random_stream(rng, n, n_types, max_gap=5):
+    """Zero gaps are common (p = 1/(max_gap+1)) -> duplicate timestamps."""
+    gaps = rng.integers(0, max_gap + 1, size=n).astype(np.float32) * 0.25
+    times = np.cumsum(gaps).astype(np.float32)
+    types = rng.integers(0, n_types, size=n).astype(np.int32)
+    return EventStream(types, times, n_types)
+
+
+def make_sharded_case(seed: int, n_types=4, shard_counts=SHARD_COUNTS):
+    """Seeded (stream, n_shards, t_high, threshold) with prime shard lengths.
+
+    The stream length is ``n_shards * n_local - trim`` so the tail shard
+    sees 0-2 padding events; duplicate timestamps appear at shard
+    boundaries with the same zero-gap mechanism as everywhere else.
+    """
+    rng = np.random.default_rng(seed)
+    n_shards = int(rng.choice(shard_counts))
+    n_local = int(rng.choice(PRIME_SHARD_LENS))
+    trim = int(rng.integers(0, min(3, n_shards * n_local)))
+    n = max(1, n_shards * n_local - trim)
+    stream = _random_stream(rng, n, n_types, max_gap=4)
+    t_high = float(rng.uniform(0.5, 3.0))
+    threshold = int(rng.integers(2, 9))
+    return stream, n_shards, t_high, threshold
+
+
+def make_straddling_case(seed: int, n_types=3, n_shards=8):
+    """Seeded (stream, n_shards, t_high, threshold): occurrences straddle
+    >= 3 shards.
+
+    Shards are short (a small prime of events each) and the shared window
+    high spans at least three shards' worth of time, so multi-symbol
+    occurrences cross several shard boundaries; the multi-hop halo is what
+    keeps them exact.
+    """
+    rng = np.random.default_rng(seed)
+    n_local = int(rng.choice((3, 5, 7)))
+    n = n_shards * n_local - int(rng.integers(0, 3))
+    stream = _random_stream(rng, n, n_types, max_gap=3)
+    total = float(np.asarray(stream.times)[-1]) or 1.0
+    t_high = max(3.0 * total / n_shards, 0.5)
+    threshold = int(rng.integers(2, 7))
+    return stream, n_shards, t_high, threshold
+
+
+try:
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # the child process runs seeded loops instead
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def streams(draw, max_events=120, max_types=4, min_events=1):
+        """Random time-sorted stream; zero gaps -> duplicate timestamps."""
+        n_types = draw(st.integers(2, max_types))
+        n = draw(st.integers(min_events, max_events))
+        gaps = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+        times = np.cumsum(np.asarray(gaps, np.float32) * 0.25)
+        types = np.asarray(
+            draw(st.lists(st.integers(0, n_types - 1), min_size=n, max_size=n)),
+            np.int32)
+        return EventStream(types, times.astype(np.float32), n_types)
+
+    @st.composite
+    def episodes(draw, n_types=4, min_len=1, max_len=4):
+        """Serial episode with one shared (lo, lo+width] window per gap."""
+        n = draw(st.integers(min_len, max_len))
+        syms = draw(st.lists(st.integers(0, n_types - 1),
+                             min_size=n, max_size=n))
+        lo = draw(st.floats(0.0, 1.0))
+        width = draw(st.floats(0.3, 4.0))
+        return serial(syms, lo, lo + width)
+
+    @st.composite
+    def per_gap_episodes(draw, n_types=4, min_len=2, max_len=4):
+        """Serial episode whose every gap draws its own (lo, hi] window."""
+        n = draw(st.integers(min_len, max_len))
+        syms = draw(st.lists(st.integers(0, n_types - 1),
+                             min_size=n, max_size=n))
+        lows = [draw(st.floats(0.0, 1.0)) for _ in range(n - 1)]
+        highs = [lo + draw(st.floats(0.3, 4.0)) for lo in lows]
+        return Episode(tuple(syms), tuple(lows), tuple(highs))
+
+    @st.composite
+    def stream_and_batch(draw, max_events=120, n_types=4, batch=4,
+                         min_ep_len=2, max_ep_len=4):
+        """A stream plus an equal-length episode batch (fused parity)."""
+        s = draw(streams(max_events=max_events, max_types=n_types))
+        s = EventStream(s.types, s.times, n_types)      # fixed alphabet
+        ep_len = draw(st.integers(min_ep_len, max_ep_len))
+        lo = draw(st.floats(0.0, 1.0))
+        width = draw(st.floats(0.3, 4.0))
+        eps = [
+            serial(draw(st.lists(st.integers(0, n_types - 1),
+                                 min_size=ep_len, max_size=ep_len)),
+                   lo, lo + width)
+            for _ in range(batch)
+        ]
+        return s, eps
+
+    def seeds():
+        """Seed stream for the seeded case builders above — hypothesis
+        drives (and shrinks) the seed, the builder shapes the case."""
+        return st.integers(0, 2**31 - 1)
+
+
+def clamp_episode(ep: Episode, n_types: int) -> Episode:
+    """Fold an episode's symbols into a (possibly smaller) alphabet."""
+    return Episode(tuple(s % n_types for s in ep.symbols), ep.t_low, ep.t_high)

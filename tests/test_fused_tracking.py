@@ -212,39 +212,20 @@ def test_fused_overflow_flag_matches_dense_pallas(seed, wt):
 
 try:  # hypothesis widens the seeded parity checks when available
     from hypothesis import given, settings, strategies as st
+    import strategies as sts  # the shared generators (tests/strategies.py)
     HAVE_HYPOTHESIS = True
 except ImportError:
     HAVE_HYPOTHESIS = False
 
 if HAVE_HYPOTHESIS:
 
-    @st.composite
-    def stream_and_batch(draw, max_events=120, n_types=4, batch=4):
-        n = draw(st.integers(1, max_events))
-        gaps = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
-        times = np.cumsum(np.asarray(gaps, np.float32) * 0.25)
-        types = np.asarray(
-            draw(st.lists(st.integers(0, n_types - 1), min_size=n, max_size=n)),
-            np.int32)
-        stream = EventStream(types, times.astype(np.float32), n_types)
-        ep_len = draw(st.integers(2, 4))
-        lo = draw(st.floats(0.0, 1.0))
-        width = draw(st.floats(0.3, 4.0))
-        episodes = [
-            serial(draw(st.lists(st.integers(0, n_types - 1),
-                                 min_size=ep_len, max_size=ep_len)),
-                   lo, lo + width)
-            for _ in range(batch)
-        ]
-        return stream, episodes
-
     @settings(max_examples=25, deadline=None)
-    @given(case=stream_and_batch())
+    @given(case=sts.stream_and_batch())
     def test_fused_parity_property(case):
         _check_fused_parity(case)
 
     @settings(max_examples=10, deadline=None)
-    @given(case=stream_and_batch(), wt=st.integers(1, 4))
+    @given(case=sts.stream_and_batch(), wt=st.integers(1, 4))
     def test_fused_truncation_parity_property(case, wt):
         _check_truncation_parity(case, wt)
 

@@ -1,0 +1,88 @@
+"""Golden-fixture regression: every miner recovers the checked-in answer.
+
+tests/data/golden_stream.npz (scripts/make_golden_stream.py) is a small
+simulated spike train with two planted cascades and the exact per-level
+frequent sets — oracle-verified at generation time. `mine`, `mine_arrays`
+(per engine), and `mine_sharded` (8 simulated devices, via the child
+subprocess) must all reproduce it bit-for-bit.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import MinerConfig, mine, mine_arrays
+from repro.core.events import EventStream
+
+REPO = Path(__file__).resolve().parent.parent
+GOLDEN = REPO / "tests" / "data" / "golden_stream.npz"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    data = np.load(GOLDEN)
+    stream = EventStream(data["types"], data["times"], int(data["n_types"]))
+    cfg_kw = dict(
+        t_low=float(data["t_low"]), t_high=float(data["t_high"]),
+        threshold=int(data["threshold"]), max_level=int(data["max_level"]),
+        max_candidates=int(data["max_candidates"]))
+    return data, stream, cfg_kw
+
+
+def _assert_matches(res, data):
+    levels = [int(l) for l in data["levels"]]
+    assert sorted(res) == levels
+    for lvl in levels:
+        np.testing.assert_array_equal(
+            res[lvl].symbols, data[f"level{lvl}_symbols"], err_msg=str(lvl))
+        np.testing.assert_array_equal(
+            res[lvl].counts, data[f"level{lvl}_counts"], err_msg=str(lvl))
+        assert res[lvl].n_candidates == int(data[f"level{lvl}_n_candidates"])
+
+
+@pytest.mark.parametrize("engine", ["dense", "dense_pallas",
+                                    "dense_pallas_fused"])
+def test_mine_arrays_recovers_golden(golden, engine):
+    data, stream, cfg_kw = golden
+    res = mine_arrays(stream, MinerConfig(**cfg_kw, engine=engine))
+    _assert_matches(res, data)
+
+
+def test_mine_episode_api_recovers_golden(golden):
+    data, stream, cfg_kw = golden
+    res = mine(stream, MinerConfig(**cfg_kw))
+    levels = [int(l) for l in data["levels"]]
+    assert sorted(res) == levels
+    for lvl in levels:
+        got_rows = np.asarray([e.symbols for e in res[lvl].episodes],
+                              np.int32).reshape(-1, lvl)
+        np.testing.assert_array_equal(got_rows, data[f"level{lvl}_symbols"])
+        np.testing.assert_array_equal(res[lvl].counts,
+                                      data[f"level{lvl}_counts"])
+
+
+def test_planted_cascades_present(golden):
+    """The fixture's deepest level contains a planted cascade prefix —
+    the miner finds the structure the simulator embedded, not noise."""
+    data, _, _ = golden
+    deepest = int(max(data["levels"]))
+    found = {tuple(int(x) for x in row)
+             for row in data[f"level{deepest}_symbols"]}
+    planted = [tuple(int(x) for x in row[:deepest])
+               for row in data["planted_symbols"]]
+    assert any(p in found for p in planted)
+
+
+def test_mine_sharded_recovers_golden_8dev():
+    """mine_sharded on 8 simulated devices == the stored frequent sets
+    (dense + fused engines; subprocess because jax locks device count)."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "sharded_mining_child.py"),
+         "golden", "--golden-path", str(GOLDEN)],
+        env=env, capture_output=True, text=True, timeout=900, cwd=str(REPO))
+    assert r.returncode == 0 and "OK golden" in r.stdout, r.stdout + r.stderr

@@ -34,9 +34,9 @@ want = count_fsm_numpy(types, times, ep)
 from repro.launch.mesh import make_mesh
 mesh = make_mesh((4, 2), ("data", "model"))
 ty, tm = shard_stream(types, times, 4)
-got, short = make_count_sharded_jit(ep, mesh, n_types=5, halo=150)(ty, tm)
+got, short, overflow = make_count_sharded_jit(ep, mesh, n_types=5, halo=150)(ty, tm)
 assert int(got) == want, (int(got), want)
-assert not bool(short)
+assert not bool(short) and not bool(overflow)
 print("OK")
 """
     r = _run(code, 8)

@@ -7,42 +7,29 @@ pytest.importorskip(
     reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
+import strategies as sts
 from repro.core import (count_fsm_numpy, count_nonoverlapped, serial)
 from repro.core.events import EventStream
 
 
-@st.composite
-def streams(draw, max_events=120, max_types=4):
-    n_types = draw(st.integers(2, max_types))
-    n = draw(st.integers(1, max_events))
-    gaps = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
-    times = np.cumsum(np.asarray(gaps, np.float32) * 0.25)
-    types = np.asarray(
-        draw(st.lists(st.integers(0, n_types - 1), min_size=n, max_size=n)),
-        np.int32)
-    return EventStream(types, times.astype(np.float32), n_types)
-
-
-@st.composite
-def episodes(draw, n_types=4):
-    n = draw(st.integers(1, 4))
-    syms = draw(st.lists(st.integers(0, n_types - 1), min_size=n, max_size=n))
-    lo = draw(st.floats(0.0, 1.0))
-    width = draw(st.floats(0.3, 4.0))
-    return serial(syms, lo, lo + width)
-
-
 @pytest.mark.parametrize("engine", ["dense", "dense_pallas", "dense_pallas_fused"])
 @settings(max_examples=40, deadline=None)
-@given(s=streams(), ep=episodes())
+@given(s=sts.streams(), ep=sts.episodes())
 def test_dense_matches_fsm_oracle(engine, s, ep):
-    if max(ep.symbols) >= s.n_types:
-        ep = serial([x % s.n_types for x in ep.symbols],
-                    ep.t_low[0] if ep.t_low else 0,
-                    ep.t_high[0] if ep.t_high else 1)
+    ep = sts.clamp_episode(ep, s.n_types)
     want = count_fsm_numpy(s.types, s.times, ep)
     # dense_pallas runs the Pallas kernel in interpret mode on CPU
     got = count_nonoverlapped(s, ep, engine=engine)
+    assert int(got.count) == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=sts.streams(), ep=sts.per_gap_episodes())
+def test_per_gap_windows_match_fsm_oracle(s, ep):
+    """Heterogeneous (per-gap) constraint windows: dense vs the FSM oracle."""
+    ep = sts.clamp_episode(ep, s.n_types)
+    want = count_fsm_numpy(s.types, s.times, ep)
+    got = count_nonoverlapped(s, ep, engine="dense")
     assert int(got.count) == want
 
 
@@ -66,7 +53,7 @@ def test_candidate_join_matches_reference(seed, n):
 
 
 @settings(max_examples=25, deadline=None)
-@given(streams(), episodes())
+@given(sts.streams(), sts.episodes())
 def test_count_bounded_by_min_symbol_count(s, ep):
     """Non-overlapped count <= events of the rarest symbol in the episode."""
     ep = serial([x % s.n_types for x in ep.symbols], 0.0, 2.0)
@@ -77,7 +64,7 @@ def test_count_bounded_by_min_symbol_count(s, ep):
 
 
 @settings(max_examples=25, deadline=None)
-@given(streams(), episodes(), st.floats(0.1, 10.0))
+@given(sts.streams(), sts.episodes(), st.floats(0.1, 10.0))
 def test_time_scale_invariance(s, ep, scale):
     """Scaling all times and windows by the same factor preserves counts."""
     ep = serial([x % s.n_types for x in ep.symbols], 0.25, 2.25)
@@ -91,7 +78,7 @@ def test_time_scale_invariance(s, ep, scale):
 
 
 @settings(max_examples=25, deadline=None)
-@given(streams())
+@given(sts.streams())
 def test_anti_monotonicity(s):
     """count(alpha) >= count(alpha extended by one symbol)."""
     ep2 = serial([0, 1], 0.0, 2.0)
@@ -102,7 +89,7 @@ def test_anti_monotonicity(s):
 
 
 @settings(max_examples=20, deadline=None)
-@given(streams(), episodes())
+@given(sts.streams(), sts.episodes())
 def test_engines_consistent(s, ep):
     ep = serial([x % s.n_types for x in ep.symbols], 0.25, 2.0)
     dense = count_nonoverlapped(s, ep, engine="dense")

@@ -1,0 +1,144 @@
+"""Differential suite: the sharded miner against its single-device twin.
+
+`mine_sharded == mine_arrays` (frequent sets, counts, candidate totals,
+flag behavior) across engines x shard counts {1, 2, 8} on adversarial
+streams — duplicate timestamps, prime shard lengths, episodes straddling
+>= 3 shards — plus fixed regressions for the boundary-tie ownership rule
+and the halo-adequacy `== span` edge. Everything multi-device runs in a
+subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(jax locks the device count at first init); the case generators live in
+tests/strategies.py and the executable body in
+tests/sharded_mining_child.py.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+CHILD = str(REPO / "tests" / "sharded_mining_child.py")
+ENV = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+
+
+def _run_child(*args, devices=8, timeout=900):
+    env = dict(ENV)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    r = subprocess.run([sys.executable, CHILD, *args], env=env,
+                       capture_output=True, text=True, timeout=timeout,
+                       cwd=str(REPO))
+    assert r.returncode == 0 and "OK" in r.stdout, r.stdout + r.stderr
+    return r
+
+
+def test_halo_and_ownership_regressions_8dev():
+    """Boundary-timestamp-tie ownership, the halo == span duplicate edge
+    (flagged, never silent), per-episode flags in the batched path, and a
+    >= 3-shard straddle — the fixed adversarial cases."""
+    _run_child("halo", timeout=300)
+
+
+def test_differential_smoke_8dev():
+    """A small always-on slice of the differential sweep (the full sweep
+    is the slow-marked tests below)."""
+    _run_child("differential", "--engine", "dense", "--examples", "8",
+               timeout=300)
+
+
+@pytest.mark.slow
+def test_differential_dense_8dev():
+    _run_child("differential", "--engine", "dense", "--examples", "100")
+
+
+@pytest.mark.slow
+def test_differential_fused_8dev():
+    _run_child("differential", "--engine", "dense_pallas_fused",
+               "--examples", "60")
+
+
+@pytest.mark.slow
+def test_differential_count_scan_write_8dev():
+    # the faithful compaction pipeline compiles slowly under shard_map;
+    # 15 examples here, the bulk of the >= 200-example budget rides the
+    # dense/fused sweeps above
+    _run_child("differential", "--engine", "count_scan_write",
+               "--examples", "15")
+
+
+@pytest.mark.slow
+def test_differential_straddling_8dev():
+    """Episodes straddling >= 3 shards: multi-hop halo exactness."""
+    _run_child("straddle", "--examples", "40")
+
+
+# ---------------------------------------------------------------------------
+# Single-device pieces of the sharded machinery (no subprocess needed)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_stream_pads_and_reshapes():
+    from repro.core import shard_stream
+    ty, tm = shard_stream(np.arange(5, dtype=np.int32),
+                          np.arange(5, dtype=np.float32), 3)
+    assert ty.shape == tm.shape == (3, 2)
+    assert ty[2, 1] == -1 and np.isinf(tm[2, 1])
+    # a stream shorter than the shard count still yields one event per shard
+    ty, tm = shard_stream(np.zeros(2, np.int32), np.zeros(2, np.float32), 8)
+    assert ty.shape == (8, 1) and (ty[2:] == -1).all()
+
+
+def test_type_index_drops_negative_padding_types():
+    """-1 padded types must not wrap into the last type's row (jax scatter
+    indices wrap): before the fix they inflated its count and raced +inf
+    writes against its real times."""
+    import jax.numpy as jnp
+    from repro.core.events import type_index
+    types = jnp.asarray([2, -1, 2, -1, -1], jnp.int32)
+    times = jnp.asarray([1.0, jnp.inf, 2.0, jnp.inf, jnp.inf], jnp.float32)
+    table, counts = type_index(types, times, 3, 5)
+    np.testing.assert_array_equal(np.asarray(counts), [0, 0, 2])
+    np.testing.assert_array_equal(np.asarray(table[2][:2]), [1.0, 2.0])
+
+
+def test_single_shard_sharded_mining_matches_unsharded():
+    """n_shards=1 on the default mesh: the whole sharded pipeline (index
+    build, ownership, merge) degenerates to the single-device answer."""
+    from repro.core import MinerConfig, mine_arrays
+    from repro.launch.mesh import make_mesh
+    rng = np.random.default_rng(3)
+    from repro.core.events import EventStream
+    n = 120
+    stream = EventStream(rng.integers(0, 4, n).astype(np.int32),
+                         np.cumsum(rng.exponential(0.4, n)).astype(np.float32),
+                         4)
+    kw = dict(t_low=0.0, t_high=2.0, threshold=6, max_level=3)
+    base = mine_arrays(stream, MinerConfig(**kw))
+    mesh = make_mesh((1,), ("data",))
+    got = mine_arrays(stream, MinerConfig(**kw, mesh=mesh, halo=64))
+    assert base.keys() == got.keys()
+    for lvl in base:
+        np.testing.assert_array_equal(base[lvl].symbols, got[lvl].symbols)
+        np.testing.assert_array_equal(base[lvl].counts, got[lvl].counts)
+        assert base[lvl].n_candidates == got[lvl].n_candidates
+
+
+def test_mine_sharded_requires_mesh():
+    from repro.core import MinerConfig, mine_sharded
+    from repro.core.events import EventStream
+    s = EventStream(np.zeros(4, np.int32), np.arange(4, dtype=np.float32), 2)
+    with pytest.raises(ValueError, match="mesh"):
+        mine_sharded(s, MinerConfig(t_low=0.0, t_high=1.0, threshold=1))
+
+
+def test_count_sharded_rejects_mismatched_mesh():
+    from repro.core import serial
+    from repro.core.distributed import count_sharded
+    from repro.launch.mesh import make_mesh
+    import jax.numpy as jnp
+    mesh = make_mesh((1,), ("data",))
+    ty = jnp.zeros((2, 4), jnp.int32)
+    tm = jnp.zeros((2, 4), jnp.float32)
+    with pytest.raises(ValueError, match="mesh axis"):
+        count_sharded(ty, tm, serial([0, 1], 0.0, 1.0), mesh, n_types=2)
