@@ -31,8 +31,7 @@ import pathlib
 import jax
 import numpy as np
 
-from repro.core import (count_batch, count_mapconcat, count_fsm_numpy,
-                        count_nonoverlapped, serial)
+from repro.core import count_batch, count_mapconcat, count_fsm_numpy, serial
 from repro.core.episodes import episode_batch
 from repro.data.spikes import NetworkConfig, embedded_episodes, paper_dataset
 

@@ -16,7 +16,7 @@ import os
 import jax
 import numpy as np
 
-from repro.core import MinerConfig, count_nonoverlapped, mine_arrays, serial, shard_stream
+from repro.core import MinerConfig, count_nonoverlapped, mine_arrays, shard_stream
 from repro.core.distributed import make_count_sharded_jit
 from repro.data.spikes import NetworkConfig, embedded_episodes, paper_dataset
 from repro.launch.mesh import make_mesh

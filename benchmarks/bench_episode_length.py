@@ -7,7 +7,6 @@ beyond-paper dense engine. Episode length sweeps 2..9 on dataset 1
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import count_batch
 from repro.core.episodes import episode_batch

@@ -10,7 +10,6 @@ scan-based pipeline.
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from repro.analysis.hlo_costs import module_costs
 from repro.core import count_batch, count_mapconcat

@@ -54,7 +54,7 @@ def compare_entries(baseline, new, threshold=REGRESSION_THRESHOLD):
         if new_us is None:
             regressions.append(
                 f"{tag} {engine}: baseline-fastest engine missing from the "
-                f"new sweep — cell not gated")
+                "new sweep — cell not gated")
         elif new_us > (1.0 + threshold) * base_us:
             regressions.append(
                 f"{tag} {engine}: {base_us:.1f}us -> {new_us:.1f}us "
@@ -69,16 +69,47 @@ def matched_cells(baseline, new) -> int:
     return sum(1 for e in new if (_cell_key(e), e["engine"]) in base_keys)
 
 
-def run_compare(baseline_path: str) -> int:
+def best_entries(*entry_lists) -> list:
+    """Per-(cell, engine) fastest entry across repeated sweeps.
+
+    Shared-machine interference is additive, so the min over independent
+    runs approximates the true cost; the gate retries with this so a noisy
+    neighbor cannot fail it, while a *persistent* regression still does
+    (it is just as slow on every re-measure)."""
+    by = {}
+    for e in (entry for entries in entry_lists for entry in entries):
+        k = (_cell_key(e), e["engine"])
+        if k not in by or e["us_per_call"] < by[k]["us_per_call"]:
+            by[k] = e
+    return list(by.values())
+
+
+def run_compare(baseline_path: str,
+                threshold: float = REGRESSION_THRESHOLD) -> int:
     import pathlib
 
     from . import bench_counting
     with open(baseline_path) as f:
         baseline = json.load(f)["entries"]
     # sidecar output: the gate must never overwrite the baseline it reads
-    new = bench_counting.run_engine_sweep(
-        json_path=pathlib.Path("BENCH_counting.compare.json"))
-    lines, regressions = compare_entries(baseline, new)
+    sidecar = pathlib.Path("BENCH_counting.compare.json")
+    new = bench_counting.run_engine_sweep(json_path=sidecar)
+    lines, regressions = compare_entries(baseline, new, threshold=threshold)
+    # one noise retry, and only for slowdowns: a baseline-fastest engine
+    # MISSING from the sweep is deterministic — re-measuring cannot fix it
+    if any("missing" not in r for r in regressions):
+        print(f"\n{len(regressions)} cell(s) over threshold — re-measuring "
+              "once to separate interference from real regressions")
+        import jax
+
+        new = best_entries(new, bench_counting.run_engine_sweep(
+            json_path=sidecar))
+        sidecar.write_text(json.dumps(
+            {"backend": jax.default_backend(),
+             "suite": "counting_engine_sweep", "retry": "best-of-2",
+             "entries": new}, indent=2) + "\n")
+        lines, regressions = compare_entries(baseline, new,
+                                             threshold=threshold)
     print(f"\n== compare vs {baseline_path} ==")
     for line in lines:
         print(line)
@@ -93,32 +124,56 @@ def run_compare(baseline_path: str) -> int:
             print(r)
         return 1
     print("\nno regression of any cell's fastest engine "
-          f"(threshold {REGRESSION_THRESHOLD:.0%})")
+          f"(threshold {threshold:.0%})")
     return 0
+
+
+SUITE_NAMES = ("counting", "mining", "corpus", "episode_length", "frequency",
+               "instruction_mix", "distributed")
+
+
+def unknown_suites(chosen) -> list:
+    """Names in ``chosen`` that are not benchmark suites (order kept)."""
+    return [name for name in chosen if name not in SUITE_NAMES]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: counting,mining,episode_length,"
-                         "frequency,instruction_mix,distributed")
+                    help="comma list of suites to run; valid: "
+                         + ",".join(SUITE_NAMES))
     ap.add_argument("--compare", default=None, metavar="BASELINE_JSON",
                     help="re-run the counting sweep and gate against a "
                          "checked-in BENCH_counting.json baseline")
+    ap.add_argument("--threshold", type=float, default=REGRESSION_THRESHOLD,
+                    help="allowed fractional slowdown of each cell's "
+                         "baseline-fastest engine before --compare fails "
+                         f"(default {REGRESSION_THRESHOLD}; CI uses a looser "
+                         "bound because runners differ from the machine the "
+                         "baseline was measured on)")
     args = ap.parse_args()
     if args.compare:
-        raise SystemExit(run_compare(args.compare))
-    from . import (bench_counting, bench_distributed, bench_episode_length,
-                   bench_frequency, bench_instruction_mix, bench_mining)
+        raise SystemExit(run_compare(args.compare, threshold=args.threshold))
+    chosen = args.only.split(",") if args.only else list(SUITE_NAMES)
+    # validate BEFORE importing/running anything: a typo'd suite name must
+    # be a loud usage error listing the valid names, not a skipped suite a
+    # CI smoke step could false-pass on
+    unknown = unknown_suites(chosen)
+    if unknown:
+        ap.error(f"unknown suite(s) {','.join(unknown)!r}; "
+                 f"valid suites: {', '.join(SUITE_NAMES)}")
+    from . import (bench_corpus, bench_counting, bench_distributed,
+                   bench_episode_length, bench_frequency,
+                   bench_instruction_mix, bench_mining)
     suites = {
         "counting": bench_counting.run,            # paper Figs 9-10 + engine sweep
         "mining": bench_mining.run,                # device-resident miner e2e
+        "corpus": bench_corpus.run,                # multi-stream batched miner
         "episode_length": bench_episode_length.run,  # paper Fig 11
         "frequency": bench_frequency.run,          # paper Fig 12
         "instruction_mix": bench_instruction_mix.run,  # paper Table III
         "distributed": bench_distributed.run,      # beyond-paper scaling
     }
-    chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     failed = 0
     for name in chosen:

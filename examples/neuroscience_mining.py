@@ -7,7 +7,6 @@ then recover the embedded cascades by level-wise frequent episode mining.
 import argparse
 import time
 
-import numpy as np
 
 from repro.core import MinerConfig, mine
 from repro.data.spikes import (NetworkConfig, embedded_episodes,

@@ -1,9 +1,8 @@
 """Quick host-side validation of the core mining engine vs the numpy oracle."""
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core import (
-    Episode, EventStream, serial, count_nonoverlapped, count_fsm_numpy,
+    EventStream, serial, count_nonoverlapped, count_fsm_numpy,
     count_fsm_scan, count_mapconcat, count_all_occurrences_numpy, greedy_numpy,
     ENGINES,
 )

@@ -4,7 +4,6 @@ from __future__ import annotations
 import glob
 import json
 import sys
-from pathlib import Path
 
 
 def _fmt_t(x: float) -> str:
@@ -33,7 +32,7 @@ def roofline_table(out_dir: str = "experiments/dryrun",
     for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
         if r["status"] == "skipped":
             lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
-                         f"skipped (full attention @500k) | — | — | — | — | — |")
+                         "skipped (full attention @500k) | — | — | — | — | — |")
             continue
         if r["status"] != "ok":
             lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | "

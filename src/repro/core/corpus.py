@@ -1,0 +1,284 @@
+"""Multi-stream batched mining: one level loop for a whole corpus (§II-C at
+corpus scale).
+
+The paper's transformation counts one spike-train at a time, but its
+intended users analyze corpora — many recordings/trials per experiment
+(cf. *Towards Chip-on-Chip Neuroscience*). :func:`mine_corpus` runs the
+Apriori level loop ONCE for a padded batch of ``S`` independent streams:
+
+* the per-stream type indexes are built in one vmapped device pass
+  (:func:`events.type_index_batch`); ragged stream lengths cost ``+inf``
+  padding inside the shared capacity, never extra launches or recompiles;
+* per level, every stream's candidate frontier is joined on host (compact
+  numpy, exactly :func:`mining.generate_candidates_arrays` per stream), the
+  frontiers are deduplicated into one *union* candidate batch, and that
+  union is counted against every stream through a single dispatch
+  (:func:`counting.count_corpus_indexed` — with a corpus-native engine the
+  whole ``S x B`` grid is ONE fused kernel launch, the stream axis folded
+  into the batch grid dimension);
+* per-stream thresholds are applied on device (``keep`` masks ride back in
+  the same transfer), so each level pays exactly ONE host sync for the
+  whole corpus;
+* streams whose frontier empties go *quiet*: they stop contributing
+  candidates and their rows of the fetched arrays are masked on host —
+  never branched on device (static shapes, no recompiles) and never given
+  an extra sync. A quiet stream's overflow flags are masked too: it counts
+  nothing, so it can overflow nothing (matching its solo run).
+
+Results are bit-for-bit identical to ``[mine_arrays(s) for s in streams]``
+— tracking, scheduling, and overflow are per-(stream, episode)-row, so
+batch composition cannot perturb them (differentially tested, including
+the golden fixture).
+
+Aggregation modes: ``per_stream`` (the list of per-stream frequent sets)
+always; ``corpus`` ("frequent in >= m streams") when ``min_streams`` is
+given — per level, the episodes frequent in at least ``m`` streams, with
+``counts`` = the number of supporting streams (support, not occurrence
+totals: corpora mix trials of different lengths, so occurrence sums would
+be dominated by the longest recording).
+
+With ``cfg.mesh`` set the stream axis is sharded across the mesh
+(:func:`distributed.count_corpus_sharded_indexed`): streams are
+independent, so no halo exchange and no cross-shard merge exist at all —
+the embarrassingly-parallel fast path (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import counting, distributed
+from . import events as events_lib
+from .events import EventStream
+from .mining import (_OVERFLOW_MSG, LevelArrays, MinerConfig, _prune_level,
+                     generate_candidates_arrays, pad_candidate_rows)
+
+
+@dataclasses.dataclass
+class CorpusResult:
+    """Per-stream frequent sets plus the optional corpus-level aggregate."""
+
+    per_stream: List[Dict[int, LevelArrays]]
+    corpus: Optional[Dict[int, LevelArrays]] = None
+
+
+def pad_corpus(
+    streams: Sequence[EventStream],
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Stack a ragged corpus into padded ``[S, L]`` arrays.
+
+    Types pad with ``-1`` (dropped by the type index), times with ``+inf``
+    (inert under every downstream max/searchsorted). All streams must share
+    one event-type alphabet — level-1 results depend on ``n_types``, so a
+    mixed corpus cannot match its per-stream runs.
+
+    Returns ``(types i32[S, L], times f32[S, L], n_types)``.
+    """
+    if not streams:
+        raise ValueError("mine_corpus needs at least one stream")
+    alphabet = {s.n_types for s in streams}
+    if len(alphabet) != 1:
+        raise ValueError(
+            f"corpus streams must share one n_types, got {sorted(alphabet)}")
+    n_types = alphabet.pop()
+    length = max(1, max(s.n_events for s in streams))
+    types = np.full((len(streams), length), -1, np.int32)
+    times = np.full((len(streams), length), np.inf, np.float32)
+    for i, s in enumerate(streams):
+        n = s.n_events
+        types[i, :n] = np.asarray(s.types)
+        times[i, :n] = np.asarray(s.times)
+    return types, times, n_types
+
+
+def _level_thresholds(
+    thresholds: np.ndarray, level: int, cfg: MinerConfig
+) -> np.ndarray:
+    """Per-stream thresholds for one level: a per-level override (shared —
+    it is a property of the level, not the stream) beats the per-stream
+    base, exactly as ``mine_arrays`` resolves it per stream."""
+    override = (cfg.level_thresholds or {}).get(level)
+    if override is not None:
+        return np.full_like(thresholds, override)
+    return thresholds
+
+
+def aggregate_min_streams(
+    per_stream: Sequence[Dict[int, LevelArrays]], min_streams: int
+) -> Dict[int, LevelArrays]:
+    """Corpus-level "frequent in >= m streams" aggregation.
+
+    Per level: the union of per-stream frequent sets (each stream's rows
+    are distinct, so concatenated multiplicity == supporting-stream count),
+    kept when supported by at least ``min_streams`` streams. ``symbols``
+    are in lexicographic row order (the union has no single discovery
+    order); ``counts`` is the support; ``n_candidates`` is the union size
+    before the support cut.
+    """
+    if min_streams < 1:
+        raise ValueError(f"min_streams must be >= 1, got {min_streams}")
+    out: Dict[int, LevelArrays] = {}
+    levels = sorted({lvl for res in per_stream for lvl in res})
+    for lvl in levels:
+        rows = [res[lvl].symbols for res in per_stream
+                if lvl in res and res[lvl].symbols.shape[0]]
+        if not rows:
+            out[lvl] = LevelArrays(
+                np.zeros((0, lvl), np.int32), np.zeros((0,), np.int32), 0)
+            continue
+        stacked = np.concatenate(rows, axis=0)
+        union, support = np.unique(stacked, axis=0, return_counts=True)
+        keep = support >= min_streams
+        out[lvl] = LevelArrays(
+            union[keep].astype(np.int32), support[keep].astype(np.int32),
+            union.shape[0])
+    return out
+
+
+def mine_corpus(
+    streams: Sequence[EventStream],
+    cfg: MinerConfig,
+    *,
+    thresholds: Optional[Sequence[int]] = None,
+    min_streams: Optional[int] = None,
+) -> CorpusResult:
+    """Level-wise mining of ``S`` independent streams in one device loop.
+
+    Args:
+      streams: the corpus; ragged lengths and empty streams are fine (they
+        pad, they don't launch). All must share one ``n_types``.
+      cfg: the usual :class:`MinerConfig`; ``cfg.threshold`` is the default
+        per-stream frequency threshold and ``cfg.mesh`` shards the *stream*
+        axis (not the time axis — no halo, streams are independent).
+      thresholds: optional per-stream threshold overrides, length ``S``.
+      min_streams: enable the corpus-level ">= m streams" aggregate
+        (defaults to ``cfg.min_streams``; ``None`` disables it).
+
+    Returns a :class:`CorpusResult` whose ``per_stream[i]`` equals
+    ``mine_arrays(streams[i], cfg_i)`` bit-for-bit (``cfg_i`` = ``cfg``
+    with that stream's threshold).
+    """
+    n_streams = len(streams)
+    types, times, n_types = pad_corpus(streams)
+    if thresholds is None:
+        thr_base = np.full((n_streams,), cfg.threshold, np.int32)
+    else:
+        thr_base = np.asarray(thresholds, np.int32)
+        if thr_base.shape != (n_streams,):
+            raise ValueError(
+                f"thresholds must have shape ({n_streams},), got {thr_base.shape}")
+    if min_streams is None:
+        min_streams = cfg.min_streams
+    cap = cfg.cap or types.shape[1]
+
+    if cfg.mesh is not None:
+        index = distributed.build_corpus_index(
+            types, times, cfg.mesh, axis=cfg.shard_axis, n_types=n_types,
+            cap=cap)
+        binc = np.asarray(index.type_counts)[:n_streams]  # level-1 host sync
+        pad_rows = index.tables.shape[0] - n_streams
+
+        def count_level(sym, lo, hi, thr):
+            thr_padded = np.concatenate(
+                [thr, np.zeros((pad_rows,), np.int32)])
+            return distributed.count_corpus_sharded_indexed(
+                index, sym, lo, hi, jnp.asarray(thr_padded),
+                engine=cfg.engine, cap_occ=cfg.cap_occ,
+                max_window=cfg.max_window,
+                parallel_schedule=cfg.parallel_schedule,
+                block_next=cfg.block_next, block_prev=cfg.block_prev,
+                window_tiles=cfg.window_tiles, interpret=cfg.interpret)
+    else:
+        tables, type_counts = events_lib.type_index_batch(
+            types, times, n_types, cap)                   # built ONCE
+        binc = np.asarray(type_counts)                    # level-1 host sync
+
+        def count_level(sym, lo, hi, thr):
+            return counting.count_corpus_indexed(
+                tables, type_counts, sym, lo, hi, jnp.asarray(thr),
+                engine=cfg.engine, cap_occ=cfg.cap_occ,
+                max_window=cfg.max_window,
+                parallel_schedule=cfg.parallel_schedule,
+                block_next=cfg.block_next, block_prev=cfg.block_prev,
+                window_tiles=cfg.window_tiles, interpret=cfg.interpret)
+
+    # level 1: per-stream single-type episodes (one transfer did all S)
+    results: List[Dict[int, LevelArrays]] = []
+    frontier: List[np.ndarray] = []
+    running = np.ones((n_streams,), bool)
+    for s in range(n_streams):
+        freq_types = np.nonzero(binc[s] >= thr_base[s])[0].astype(np.int32)
+        results.append({1: _prune_level(freq_types, binc[s], n_types)})
+        frontier.append(freq_types[:, None])
+
+    for level in range(2, cfg.max_level + 1):
+        # host-side joins: each running stream's own frontier, exactly the
+        # per-stream join (order, truncation and all)
+        joined: Dict[int, np.ndarray] = {}
+        for s in range(n_streams):
+            if not running[s]:
+                continue
+            if frontier[s].shape[0] == 0:
+                running[s] = False                       # quiet: no record
+                continue
+            cands = generate_candidates_arrays(frontier[s], level, cfg)
+            if cands.shape[0] == 0:
+                results[s][level] = LevelArrays(
+                    np.zeros((0, level), np.int32), np.zeros((0,), np.int32), 0)
+                running[s] = False
+                continue
+            joined[s] = cands
+        if not joined:
+            break
+
+        # union frontier: dedup across streams, count once for everyone.
+        # The union can exceed cfg.max_candidates (it is a PER-STREAM valve
+        # — up to S disjoint frontiers stack), so it is counted in chunks
+        # of max_candidates: tracking is per-(stream, episode)-row, so
+        # chunk boundaries cannot perturb results, and peak device memory
+        # for the [S, chunk, N, cap] gather stays what a single stream's
+        # worst-case level costs. All chunks' results are fetched in one
+        # device_get — still exactly ONE host sync per level.
+        stacked = np.concatenate(list(joined.values()), axis=0)
+        union, inverse = np.unique(stacked, axis=0, return_inverse=True)
+        inverse = inverse.reshape(-1)
+        n_union = union.shape[0]
+        thr = _level_thresholds(thr_base, level, cfg)
+        chunk = max(cfg.max_candidates, 1)
+        parts = []
+        for start in range(0, n_union, chunk):
+            rows = union[start:start + chunk].astype(np.int32)
+            sym, lo, hi = pad_candidate_rows(rows, level, cfg)
+            counts_dev, keep_dev, _, overflow_dev = count_level(
+                sym, lo, hi, thr)
+            m = rows.shape[0]
+            parts.append((counts_dev[:n_streams, :m],
+                          keep_dev[:n_streams, :m],
+                          overflow_dev[:n_streams, :m]))
+        fetched = jax.device_get(parts)                  # ONE sync per level
+        counts_h = np.concatenate([p[0] for p in fetched], axis=1)
+        keep_h = np.concatenate([p[1] for p in fetched], axis=1)
+        overflow_h = np.concatenate([p[2] for p in fetched], axis=1)
+
+        # un-union: each stream reads its own candidates' rows; quiet
+        # streams' rows (and their flags) are masked by never being read
+        offset = 0
+        for s, cands in joined.items():
+            idx = inverse[offset:offset + cands.shape[0]]
+            offset += cands.shape[0]
+            if bool(np.any(overflow_h[s, idx])):
+                raise RuntimeError(f"stream {s}: {_OVERFLOW_MSG}")
+            kept = keep_h[s, idx]
+            frontier[s] = cands[kept]
+            results[s][level] = LevelArrays(
+                frontier[s],
+                np.asarray(counts_h[s, idx])[kept].astype(np.int32),
+                cands.shape[0])
+
+    corpus = (aggregate_min_streams(results, min_streams)
+              if min_streams is not None else None)
+    return CorpusResult(per_stream=results, corpus=corpus)

@@ -160,6 +160,63 @@ def count_batch_indexed(
 
 @functools.partial(
     jax.jit,
+    static_argnames=("engine", "cap_occ", "max_window", "parallel_schedule",
+                     "block_next", "block_prev", "window_tiles", "interpret"),
+)
+def count_corpus_indexed(
+    tables: jax.Array,      # f32[S, n_types, cap] per-stream type indexes
+    counts: jax.Array,      # i32[S, n_types] true per-type totals (pre-clip)
+    symbols: jax.Array,     # i32[B, N] shared candidate batch
+    t_low: jax.Array,       # f32[B, N-1]
+    t_high: jax.Array,      # f32[B, N-1]
+    thresholds: jax.Array,  # i32[S] per-stream frequency thresholds
+    *,
+    engine: str = "dense",
+    cap_occ: Optional[int] = None,
+    max_window: int = 32,
+    parallel_schedule: bool = False,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Count one candidate batch against a whole corpus of streams at once.
+
+    The stream axis of the *pre-built* batched type index
+    (:func:`events.type_index_batch`) rides through tracking as a fold into
+    the candidate-batch dimension (:func:`tracking.track_corpus_dispatch`):
+    with a corpus-native engine the entire ``S x B`` grid is ONE kernel
+    launch per mining level, and every stream's keep mask is computed on
+    device against its own threshold — the corpus miner fetches (counts,
+    keep, overflow) for all streams in a single per-level host sync.
+
+    Returns ``(counts i32[S, B], keep bool[S, B], n_superset i32[S, B],
+    overflow bool[S, B])``. Per-row results are bit-for-bit what
+    :func:`count_batch_indexed` returns for that stream alone — tracking,
+    scheduling, and overflow math are per-(stream, episode)-row, so batch
+    composition cannot perturb them (differentially tested).
+    """
+    cap = tables.shape[2]
+    index_overflow = jnp.any(counts > cap, axis=-1)         # [S]
+    cfg = tracking.EngineConfig(
+        cap_occ=cap_occ, max_window=max_window, block_next=block_next,
+        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)
+    occ = tracking.track_corpus_dispatch(
+        engine, tables[:, symbols], t_low, t_high, cfg)
+
+    def schedule(starts, ends, valid):
+        one = tracking.Occurrences(
+            starts, ends, valid, jnp.int32(0), jnp.bool_(False))
+        return scheduling.greedy_count(one, parallel=parallel_schedule)
+
+    corpus_counts = jax.vmap(jax.vmap(schedule))(occ.starts, occ.ends, occ.valid)
+    keep = corpus_counts >= thresholds.astype(jnp.int32)[:, None]
+    return (corpus_counts, keep, occ.n_superset,
+            occ.overflow | index_overflow[:, None])
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("n_types", "cap", "engine", "cap_occ", "max_window",
                      "parallel_schedule", "block_next", "block_prev",
                      "window_tiles", "interpret"),

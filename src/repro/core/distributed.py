@@ -49,6 +49,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import counting
 from . import events as events_lib
 from . import scheduling, tracking
 from .episodes import Episode
@@ -368,3 +369,153 @@ def make_count_sharded_jit(episode: Episode, mesh: Mesh, **kw):
     """jit-wrapped sharded counter for repeated use (benchmarks/serving)."""
     fn = functools.partial(count_sharded, episode=episode, mesh=mesh, **kw)
     return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Corpus sharding: the STREAM axis over the mesh (no halo — streams are
+# independent, so unlike the time-sharded path above there is no boundary
+# occurrence to exchange and no cross-shard greedy merge; each device mines
+# its slice of the corpus in complete isolation and the only collective is
+# the level-1 type-count assembly the host reads anyway)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusIndex:
+    """Per-stream type indexes, stream-sharded over the mesh.
+
+    ``n_streams`` is the real corpus size; rows past it are all-padding
+    streams appended so the stream axis divides the mesh axis (they count
+    nothing and the host never reads their rows).
+    """
+
+    tables: jax.Array        # f32[S_pad, n_types, cap] (stream-sharded)
+    type_counts: jax.Array   # i32[S_pad, n_types]
+    mesh: Mesh
+    axis: str
+    n_streams: int
+
+    @property
+    def cap(self) -> int:
+        return self.tables.shape[2]
+
+
+def pad_corpus_streams(
+    types: np.ndarray, times: np.ndarray, n_shards: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side prep: pad the STREAM axis to a multiple of ``n_shards``
+    with all-padding streams (types ``-1``, times ``+inf``)."""
+    types = np.asarray(types, np.int32)
+    times = np.asarray(times, np.float32)
+    n_streams = types.shape[0]
+    s_pad = max(1, -(-n_streams // n_shards)) * n_shards
+    if s_pad != n_streams:
+        pad = s_pad - n_streams
+        types = np.concatenate(
+            [types, np.full((pad, types.shape[1]), -1, np.int32)])
+        times = np.concatenate(
+            [times, np.full((pad, times.shape[1]), np.inf, np.float32)])
+    return types, times
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "n_types", "cap"))
+def _build_corpus_index_impl(types, times, *, mesh, axis, n_types, cap):
+    def shard_fn(ty_blk, tm_blk):
+        return events_lib.type_index_batch(ty_blk, tm_blk, n_types, cap)
+
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None)),
+        out_specs=(P(axis, None, None), P(axis, None)),
+    )
+    return fn(types, times)
+
+
+def build_corpus_index(
+    types: np.ndarray,   # i32[S, L] (-1 padding)
+    times: np.ndarray,   # f32[S, L] (+inf padding)
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+    n_types: int,
+    cap: int,
+) -> CorpusIndex:
+    """One shard_map pass: every shard builds its streams' type indexes.
+
+    No halo exchange happens (or could help): a stream lives wholly on one
+    shard, so the per-stream index is exactly the single-device one.
+    """
+    n_streams = types.shape[0]
+    types, times = pad_corpus_streams(types, times, mesh.shape[axis])
+    tables, counts = _build_corpus_index_impl(
+        jnp.asarray(types), jnp.asarray(times),
+        mesh=mesh, axis=axis, n_types=n_types, cap=cap)
+    return CorpusIndex(
+        tables=tables, type_counts=counts, mesh=mesh, axis=axis,
+        n_streams=n_streams)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "engine", "cap_occ", "max_window",
+                     "parallel_schedule", "block_next", "block_prev",
+                     "window_tiles", "interpret"),
+)
+def _count_corpus_sharded_impl(
+    tables, type_counts, symbols, t_low, t_high, thresholds, *,
+    mesh, axis, engine, cap_occ, max_window, parallel_schedule,
+    block_next, block_prev, window_tiles, interpret,
+):
+    def shard_fn(tbl, cnt, sym, lo, hi, thr):
+        # each shard counts its local streams exactly as the single-device
+        # corpus counter would — no collective anywhere in the level path
+        return counting.count_corpus_indexed(
+            tbl, cnt, sym, lo, hi, thr,
+            engine=engine, cap_occ=cap_occ, max_window=max_window,
+            parallel_schedule=parallel_schedule, block_next=block_next,
+            block_prev=block_prev, window_tiles=window_tiles,
+            interpret=interpret)
+
+    # unchecked for the same reason as the time-sharded counter: pallas_call
+    # has no replication rule in the shard_map checker
+    fn = shard_map_unchecked(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None), P(), P(), P(), P(axis)),
+        out_specs=(P(axis, None),) * 4,
+    )
+    return fn(tables, type_counts, symbols, t_low, t_high, thresholds)
+
+
+def count_corpus_sharded_indexed(
+    index: CorpusIndex,
+    symbols: jax.Array,     # i32[B, N] shared candidate batch
+    t_low: jax.Array,       # f32[B, N-1]
+    t_high: jax.Array,      # f32[B, N-1]
+    thresholds: jax.Array,  # i32[S_pad] per-stream frequency thresholds
+    *,
+    engine: str = "dense",
+    cap_occ: Optional[int] = None,
+    max_window: int = 32,
+    parallel_schedule: bool = False,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Stream-sharded corpus counting: the embarrassingly-parallel path.
+
+    Same contract as :func:`counting.count_corpus_indexed` — returns
+    ``(counts, keep, n_superset, overflow)``, each ``[S_pad, B]`` and
+    stream-sharded over the mesh; the miner's single per-level
+    ``device_get`` assembles them. Every per-stream row is bit-for-bit the
+    single-device result: no halo, no merge, no tie-breaking exists on this
+    axis because no occurrence can cross a stream boundary.
+    """
+    return _count_corpus_sharded_impl(
+        index.tables, index.type_counts, jnp.asarray(symbols, jnp.int32),
+        jnp.asarray(t_low, jnp.float32), jnp.asarray(t_high, jnp.float32),
+        jnp.asarray(thresholds, jnp.int32),
+        mesh=index.mesh, axis=index.axis, engine=engine, cap_occ=cap_occ,
+        max_window=max_window, parallel_schedule=parallel_schedule,
+        block_next=block_next, block_prev=block_prev,
+        window_tiles=window_tiles, interpret=interpret)

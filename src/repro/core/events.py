@@ -97,6 +97,26 @@ def type_index(
     return table, counts
 
 
+def type_index_batch(
+    types: jax.Array, times: jax.Array, n_types: int, cap: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-stream type indexes for a padded corpus (jit-compatible).
+
+    Args:
+      types: int32[S, L] per-stream event types, ``-1`` padding (the sharded
+        stream convention — padding is remapped out of bounds and dropped,
+        never scattered into a real row).
+      times: float32[S, L] per-stream times, ``+inf`` padding.
+
+    Returns ``(tables f32[S, n_types, cap], counts i32[S, n_types])`` — the
+    stream-axis twin of :func:`type_index`, built in one vmapped pass so the
+    corpus miner pays one device program for the whole batch of streams.
+    """
+    return jax.vmap(type_index, in_axes=(0, 0, None, None))(
+        jnp.asarray(types, jnp.int32), jnp.asarray(times, jnp.float32),
+        n_types, cap)
+
+
 def _rank_within_type(types: jax.Array, n_types: int) -> jax.Array:
     """rank[i] = #events j<i with types[j]==types[i]; O(n log n), no (n,T) blowup."""
     n = types.shape[0]

@@ -26,7 +26,6 @@ events inside each segment, parallel only across segments.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,7 +78,6 @@ def count_mapconcat(
 
     nsym = episode.n
     sym, lo, hi = episode.as_arrays()
-    span = jnp.float32(episode.max_span)
 
     def map_step(seg_ty, seg_tm, t_hi):
         """FSM over one segment (with halo); records occurrence intervals

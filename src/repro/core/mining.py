@@ -59,6 +59,8 @@ class MinerConfig:
     parallel_schedule: bool = False  # greedy_parallel (O(log^2 n) depth)
                                      # instead of the lax.scan scheduler
     max_candidates: int = 4096   # safety valve per level
+    min_streams: Optional[int] = None  # corpus aggregation: episodes frequent
+                                       # in >= this many streams (mine_corpus)
     block_next: int = 256        # Pallas tile shape (dense_pallas engine)
     block_prev: int = 256
     window_tiles: int = 0        # 0 = exact full-window coverage
@@ -200,19 +202,28 @@ _OVERFLOW_MSG = (
     "constraint window; raise cap/cap_occ/max_window/window_tiles")
 
 
+def pad_candidate_rows(cands: np.ndarray, level: int, cfg: MinerConfig):
+    """Pad a non-empty candidate-row batch to a MAX_BATCH_PAD multiple
+    (repeating row 0 — counted, then discarded) and broadcast the uniform
+    windows; returns ``(sym, lo, hi)`` device arrays. Shared by the
+    single-stream miner and the corpus miner's union frontier."""
+    b = cands.shape[0]
+    bp = _pad_to(b)
+    sym = np.concatenate([cands, np.broadcast_to(cands[:1], (bp - b, level))])
+    lo = jnp.full((bp, level - 1), cfg.t_low, jnp.float32)
+    hi = jnp.full((bp, level - 1), cfg.t_high, jnp.float32)
+    return jnp.asarray(sym), lo, hi
+
+
 def _padded_level_batch(frequent: np.ndarray, level: int, cfg: MinerConfig):
     """Join + pad one level's candidates: returns ``(cands, sym, lo, hi)``
     where ``sym`` is padded to a MAX_BATCH_PAD multiple (or ``None`` when
     the join is empty) and lo/hi are the broadcast uniform windows."""
     cands = generate_candidates_arrays(frequent, level, cfg)
-    b = cands.shape[0]
-    if b == 0:
+    if cands.shape[0] == 0:
         return cands, None, None, None
-    bp = _pad_to(b)
-    sym = np.concatenate([cands, np.broadcast_to(cands[:1], (bp - b, level))])
-    lo = jnp.full((bp, level - 1), cfg.t_low, jnp.float32)
-    hi = jnp.full((bp, level - 1), cfg.t_high, jnp.float32)
-    return cands, jnp.asarray(sym), lo, hi
+    sym, lo, hi = pad_candidate_rows(cands, level, cfg)
+    return cands, sym, lo, hi
 
 
 def _prune_level(frequent_types: np.ndarray, counts: np.ndarray,

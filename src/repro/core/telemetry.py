@@ -11,12 +11,12 @@ gives a robust (burst-insensitive) straggler score.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 import numpy as np
 
 from . import counting
-from .episodes import Episode, serial
+from .episodes import serial
 from .events import EventStream
 
 

@@ -40,7 +40,6 @@ from typing import Dict, NamedTuple, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from . import compaction
 
@@ -274,6 +273,18 @@ class TrackingEngine(Protocol):
     ``counting.count_batch_indexed`` dispatches an entire candidate batch
     through it in one call instead of vmapping the per-episode ``track`` —
     the fused-kernel fast path.
+
+    Engines MAY further provide a natively corpus-batched
+
+        ``track_corpus(times_by_sym f32[S, B, N, cap], t_low f32[B, N-1],
+                       t_high f32[B, N-1], cfg) -> Occurrences``
+
+    with ``[S, B]``-leading outputs: one shared candidate batch tracked
+    against ``S`` independent streams (the per-episode windows broadcast
+    over the stream axis). ``counting.count_corpus_indexed`` dispatches
+    whole corpora through it — the fused engine folds ``(stream, episode)``
+    into its batch grid dimension, ONE launch per mining level for the
+    whole corpus.
     """
 
     name: str
@@ -335,6 +346,37 @@ def track_batch_dispatch(
         return track_batch(times_by_sym, t_low, t_high, cfg)
     return jax.vmap(lambda t, lo, hi: eng.track(t, lo, hi, cfg))(
         times_by_sym, t_low, t_high)
+
+
+def track_corpus_dispatch(
+    engine,                    # str name or TrackingEngine
+    times_by_sym: jax.Array,   # f32[S, B, N, cap] sorted rows, +inf padded
+    t_low: jax.Array,          # f32[B, N-1] shared across streams
+    t_high: jax.Array,         # f32[B, N-1]
+    cfg: EngineConfig,
+) -> Occurrences:
+    """Corpus-leading tracking through any engine.
+
+    One candidate batch, ``S`` independent streams: engines exposing the
+    native ``track_corpus`` protocol method get the whole corpus in one
+    call (the fused engine folds the stream axis into its batch grid — one
+    launch per level for every stream); everything else is vmapped over the
+    stream axis of :func:`track_batch_dispatch`, which in turn uses the
+    engine's ``track_batch`` when present. This is the ONE place corpus
+    dispatch lives — the local and sharded corpus counters both route
+    through it, so an engine gains multi-stream (and stream-sharded)
+    support by registering, nothing more.
+
+    Returns ``[S, B]``-leading Occurrences: ``starts/ends/valid`` are
+    ``[S, B, cap]``, ``n_superset``/``overflow`` are ``[S, B]``.
+    """
+    eng = get_engine(engine) if isinstance(engine, str) else engine
+    track_corpus = getattr(eng, "track_corpus", None)
+    if track_corpus is not None:
+        return track_corpus(times_by_sym, t_low, t_high, cfg)
+    return jax.vmap(
+        lambda t: track_batch_dispatch(eng, t, t_low, t_high, cfg))(
+        times_by_sym)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -476,6 +518,26 @@ class FusedDensePallasEngine:
             times_by_sym, t_low, t_high, block_next=bn, block_prev=bp,
             window_tiles=cfg.window_tiles, interpret=cfg.interpret)
         ends = times_by_sym[:, -1, :]
+        valid = (starts > NEG) & jnp.isfinite(ends)
+        return Occurrences(
+            starts=starts,
+            ends=jnp.where(valid, ends, jnp.inf),
+            valid=valid,
+            n_superset=n_superset,
+            overflow=truncated,
+        )
+
+    def track_corpus(self, times_by_sym, t_low, t_high, cfg: EngineConfig) -> Occurrences:
+        from ..kernels import ops  # deferred: core stays importable sans pallas
+
+        # stream axis folded into the batch grid dimension (ops.track_corpus):
+        # per-row tracking is identical to track_batch row-for-row, so the
+        # corpus path inherits the fused engine's exactness bit-for-bit
+        bn, bp, _ = _pallas_tile_geometry(times_by_sym.shape[-1], cfg)
+        starts, n_superset, truncated = ops.track_corpus(
+            times_by_sym, t_low, t_high, block_next=bn, block_prev=bp,
+            window_tiles=cfg.window_tiles, interpret=cfg.interpret)
+        ends = times_by_sym[:, :, -1, :]
         valid = (starts > NEG) & jnp.isfinite(ends)
         return Occurrences(
             starts=starts,

@@ -11,7 +11,7 @@ datasets (Table II: 20 s .. 4000 s of simulated time).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

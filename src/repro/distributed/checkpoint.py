@@ -14,8 +14,6 @@ with compute).
 """
 from __future__ import annotations
 
-import json
-import os
 import shutil
 import threading
 import time

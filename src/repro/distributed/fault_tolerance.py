@@ -64,7 +64,6 @@ def elastic_remesh(target_shape, axis_names, *, rules_cls=MeshRules):
     """Build a mesh over the currently-available devices. If fewer devices
     than requested survive, shrink the leading (data) axis."""
     devs = jax.devices()
-    want = int(np.prod(target_shape))
     shape = list(target_shape)
     while int(np.prod(shape)) > len(devs) and shape[0] > 1:
         shape[0] //= 2

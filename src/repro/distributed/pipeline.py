@@ -50,7 +50,6 @@ def pipeline_forward(
         # params_blk: leaves [1, ...] (this stage's slice); x_blk: [n_micro, ...]
         params = jax.tree.map(lambda a: a[0], params_blk)
         sid = lax.axis_index(axis)
-        n_ticks = n_micro + n_stages - 1
         perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
         buf = jnp.zeros_like(x_blk[0])          # resident activation
@@ -84,11 +83,9 @@ def pipeline_forward(
         outs = lax.psum(jnp.where(sid == n_stages - 1, outs, 0.0), axis)
         return outs
 
-    other = tuple(a for a in mesh.axis_names if a != axis)
     fn = shard_map(
         stage_local, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
     )
-    del other
     return fn(params_stacked, x_micro)

@@ -14,7 +14,6 @@ import dataclasses
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Logical = Union[str, None]
@@ -127,7 +126,8 @@ class MeshRules:
 
     def tree_shardings(self, spec_tree, shape_tree):
         """Zip a logical-spec tree against abstract shapes -> NamedShardings."""
-        is_spec = lambda v: isinstance(v, tuple)
+        def is_spec(v):
+            return isinstance(v, tuple)
         flat_specs, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
         flat_shapes = jax.tree.leaves(shape_tree)
         if len(flat_specs) != len(flat_shapes):

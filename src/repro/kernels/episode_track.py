@@ -215,6 +215,11 @@ def track_batch_pallas(
     tracked superset size. ``start_tile``/``num_tiles`` come from
     ``ops.window_scan_table`` — exact per-tile spans, so the kernel is exact
     whenever the table is uncapped (``ops`` flags any capping).
+
+    The batch dimension of the grid is just "independent rows": a corpus of
+    streams rides it by folding ``(stream, episode)`` into ``B`` — the fold
+    lives in ``ops.track_batch`` (per-row scan tables are row-independent,
+    so the flattened layout is fold-invariant), not here.
     """
     batch, n, cap = times_by_sym.shape
     levels = n - 1

@@ -277,9 +277,9 @@ def track_episode(
 
 
 def track_batch(
-    times_by_sym: jax.Array,    # f32[B, N, cap] sorted rows, +inf padded
-    t_low: jax.Array,           # f32[B, N-1]
-    t_high: jax.Array,          # f32[B, N-1]
+    times_by_sym: jax.Array,    # f32[..., N, cap] sorted rows, +inf padded
+    t_low: jax.Array,           # f32[..., N-1]
+    t_high: jax.Array,          # f32[..., N-1]
     *,
     block_next: int = 256,
     block_prev: int = 256,
@@ -294,7 +294,24 @@ def track_batch(
     symbol's times is the caller's (engine's) job, mirroring
     ``track_episode``. ``window_tiles`` caps the per-tile scan length for a
     latency bound — possible truncation is flagged, never silent.
+
+    Stream axis: stacked leading dims — a ``[S, B, N, cap]`` corpus of
+    ``S`` streams by ``B`` episodes — fold into the kernel's batch grid
+    dimension here (THE one fold; per-row scan tables are row-independent,
+    so the flattened layout is fold-invariant) and unfold on the way out.
+    One corpus, one launch.
     """
+    lead = times_by_sym.shape[:-2]
+    if len(lead) > 1:
+        rows = math.prod(lead)
+        starts, nsup, truncated = track_batch(
+            times_by_sym.reshape((rows,) + times_by_sym.shape[-2:]),
+            t_low.reshape((rows,) + t_low.shape[-1:]),
+            t_high.reshape((rows,) + t_high.shape[-1:]),
+            block_next=block_next, block_prev=block_prev,
+            window_tiles=window_tiles, interpret=interpret)
+        return (starts.reshape(lead + starts.shape[-1:]),
+                nsup.reshape(lead), truncated.reshape(lead))
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     batch, n, cap = times_by_sym.shape
@@ -332,3 +349,36 @@ def track_batch(
             padded, t_low, t_high, start_tile, num_tiles,
             block_next=bn, block_prev=bp, interpret=interpret)
     return starts[:, :cap], nsup, truncated
+
+
+def track_corpus(
+    times_by_sym: jax.Array,    # f32[S, B, N, cap] sorted rows, +inf padded
+    t_low: jax.Array,           # f32[B, N-1] shared across streams
+    t_high: jax.Array,          # f32[B, N-1]
+    *,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """A whole corpus of streams x candidate batch in one fused launch.
+
+    The stream axis folds into the kernel's batch grid dimension —
+    ``(stream, episode)`` rows are independent, and each folded row's scan
+    offsets come from its own stream's per-type index — so ragged stream
+    lengths cost +inf padding inside ``cap``, never extra launches.
+
+    Returns ``(starts f32[S, B, cap], n_superset i32[S, B],
+    truncated bool[S, B])``; the per-episode windows are broadcast over the
+    stream axis (the corpus miner counts one shared candidate frontier
+    against every stream).
+    """
+    s = times_by_sym.shape[0]
+    t_low = jnp.broadcast_to(
+        jnp.asarray(t_low, jnp.float32)[None], (s,) + t_low.shape)
+    t_high = jnp.broadcast_to(
+        jnp.asarray(t_high, jnp.float32)[None], (s,) + t_high.shape)
+    return track_batch(
+        times_by_sym, t_low, t_high,
+        block_next=block_next, block_prev=block_prev,
+        window_tiles=window_tiles, interpret=interpret)

@@ -15,7 +15,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from ..configs import get_config, reduced as reduce_cfg
 from ..data import DataConfig, SyntheticCorpus

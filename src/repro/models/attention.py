@@ -7,7 +7,7 @@ long_500k decode state stays O(window), see DESIGN.md).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,8 +14,7 @@ Block kinds:
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ matmul in bf16 (FlashAttention-2 discipline).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

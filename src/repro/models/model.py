@@ -15,7 +15,7 @@ musicgen consumes precomputed EnCodec code ids (vocab 2048).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

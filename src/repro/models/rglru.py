@@ -12,7 +12,6 @@ Block layout: dual-branch (gate GELU branch x RNN branch) -> out proj.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ chunk (cheap: it stays vocab-sharded over the model axis).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

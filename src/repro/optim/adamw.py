@@ -6,7 +6,7 @@ compute casts to bf16 at use — see models/layers.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,8 @@ class AdamW:
         return self.lr * warm * frac
 
     def init(self, params) -> AdamWState:
-        zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+        def zeros(p):
+            return jax.tree.map(jnp.zeros_like, p)
         return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
 
     def update(self, grads, state: AdamWState, params) -> Tuple[Any, AdamWState, dict]:

@@ -2,14 +2,12 @@
 and the launchers execute)."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from ..models.model import Model
-from ..optim.adamw import AdamW, AdamWState
+from ..optim.adamw import AdamW
 from ..optim import compression
 
 

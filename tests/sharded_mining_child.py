@@ -19,6 +19,10 @@ Modes:
                 the batched path, >= 3-shard straddle
   golden        mine_sharded on the checked-in golden fixture equals the
                 stored per-level frequent sets exactly
+  corpus        stream-axis sharding: mine_corpus with a mesh (streams
+                sharded over the devices, no halo) == the per-stream
+                mine_arrays loop, ragged corpora with per-stream
+                thresholds, alternating engines, shard counts {1, 2, 8}
 """
 import argparse
 import os
@@ -221,6 +225,33 @@ def run_halo() -> None:
     print("OK halo")
 
 
+def run_corpus(examples: int) -> None:
+    import strategies as sts
+    from repro.core import MinerConfig, mine_arrays, mine_corpus
+
+    meshes = _meshes()
+    ran = {"n": 0}
+
+    def body(seed):
+        streams, t_high, thresholds = sts.make_corpus_case(seed)
+        n_shards = (1, 2, 8)[seed % 3]
+        engine = ("dense", "dense_pallas_fused")[seed % 2]
+        kw = dict(t_low=0.0, t_high=t_high, max_level=3, engine=engine)
+        res = mine_corpus(
+            streams, MinerConfig(threshold=1, mesh=meshes[n_shards], **kw),
+            thresholds=thresholds)
+        for i, stream in enumerate(streams):
+            ref = mine_arrays(
+                stream, MinerConfig(threshold=thresholds[i], **kw))
+            _assert_levels_equal(
+                ref, res.per_stream[i],
+                ("corpus", engine, n_shards, seed, i))
+        ran["n"] += 1
+
+    _foreach_seed(body, examples)
+    print(f"OK corpus examples={examples} compared={ran['n']}")
+
+
 def run_golden(path: str) -> None:
     from repro.core import MinerConfig, mine_arrays
     from repro.core.events import EventStream
@@ -251,7 +282,7 @@ def run_golden(path: str) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("mode", choices=("differential", "straddle", "halo",
-                                     "golden"))
+                                     "golden", "corpus"))
     ap.add_argument("--engine", default="dense")
     ap.add_argument("--examples", type=int, default=25)
     ap.add_argument("--golden-path",
@@ -264,6 +295,8 @@ def main() -> None:
         run_straddle(args.examples)
     elif args.mode == "halo":
         run_halo()
+    elif args.mode == "corpus":
+        run_corpus(args.examples)
     else:
         run_golden(args.golden_path)
 

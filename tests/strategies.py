@@ -54,6 +54,33 @@ def make_sharded_case(seed: int, n_types=4, shard_counts=SHARD_COUNTS):
     return stream, n_shards, t_high, threshold
 
 
+CORPUS_BATCHES = (1, 2, 5)
+
+
+def make_corpus_case(seed: int, n_types=4, batches=CORPUS_BATCHES,
+                     max_events=40):
+    """Seeded (streams, t_high, thresholds): a ragged corpus on one shared
+    alphabet.
+
+    Duplicate timestamps come from the usual zero-gap mechanism; every
+    third seed forces an all-padding (empty) stream into the corpus, and
+    lengths are drawn independently per stream so the padded batch always
+    has ragged tails. Thresholds are per stream — the corpus miner must
+    apply each stream's own.
+    """
+    rng = np.random.default_rng(seed)
+    batch = int(rng.choice(batches))
+    streams = []
+    for b in range(batch):
+        n = int(rng.integers(1, max_events + 1))
+        if seed % 3 == 0 and b == 0:
+            n = 0                          # all-padding row in the corpus
+        streams.append(_random_stream(rng, n, n_types, max_gap=4))
+    t_high = float(rng.uniform(0.5, 3.0))
+    thresholds = [int(t) for t in rng.integers(2, 9, size=batch)]
+    return streams, t_high, thresholds
+
+
 def make_straddling_case(seed: int, n_types=3, n_shards=8):
     """Seeded (stream, n_shards, t_high, threshold): occurrences straddle
     >= 3 shards.

@@ -1,11 +1,10 @@
 """HLO cost parser: trip counting, collective bytes, roofline math."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.analysis import roofline as rl
-from repro.analysis.hlo_costs import HloModule, module_costs
+from repro.analysis.hlo_costs import module_costs
 
 
 def _compile(f, *shapes):
@@ -19,7 +18,8 @@ def _cost_analysis(c):
 
 
 def test_flops_match_cost_analysis_no_while():
-    f = lambda x, w: jnp.tanh(x @ w) @ w
+    def f(x, w):
+        return jnp.tanh(x @ w) @ w
     c = _compile(f, jax.ShapeDtypeStruct((128, 256), jnp.float32),
                  jax.ShapeDtypeStruct((256, 256), jnp.float32))
     got = module_costs(c.as_text())["flops"]
@@ -53,7 +53,8 @@ def test_nested_while():
 
 
 def test_op_mix_nonempty():
-    f = lambda x: jnp.sum(jnp.exp(x))
+    def f(x):
+        return jnp.sum(jnp.exp(x))
     c = _compile(f, jax.ShapeDtypeStruct((128,), jnp.float32))
     mix = module_costs(c.as_text())["op_mix"]
     assert sum(mix.values()) >= 1
@@ -75,7 +76,6 @@ def test_roofline_terms_and_bottleneck():
 
 
 def test_collective_bytes_from_sharded_module():
-    import os
     if jax.device_count() < 2:
         # single-device runs cannot produce partitioned collectives; the
         # multi-device path is covered by tests/test_multidevice.py
@@ -83,8 +83,11 @@ def test_collective_bytes_from_sharded_module():
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.mesh import make_mesh
     mesh = make_mesh((jax.device_count(),), ("model",))
-    f = lambda x, w: x @ w
-    sh = lambda *s: NamedSharding(mesh, P(*s))
+    def f(x, w):
+        return x @ w
+
+    def sh(*s):
+        return NamedSharding(mesh, P(*s))
     c = jax.jit(f, in_shardings=(sh(None, "model"), sh("model", None)),
                 out_shardings=sh(None, None)).lower(
         jax.ShapeDtypeStruct((64, 64), jnp.float32),

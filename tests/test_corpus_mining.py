@@ -1,0 +1,437 @@
+"""Differential suite for the corpus miner.
+
+``mine_corpus`` must equal the Python loop ``[mine_arrays(s) for s in
+streams]`` bit-for-bit — per-level frequent sets, counts, candidate totals
+and flag behavior — across engines and corpus sizes B in {1, 2, 32},
+including duplicate-timestamp streams, all-padding (empty) streams, ragged
+lengths, per-stream thresholds, and the golden fixture. The stream-sharded
+path (mesh over the stream axis, no halo) runs in a subprocess with 8
+simulated devices (tests/sharded_mining_child.py, mode ``corpus``).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import strategies as sts
+from repro.core import (MinerConfig, aggregate_min_streams, mine_arrays,
+                        mine_corpus)
+from repro.core.events import EventStream
+from repro.core.mining import LevelArrays
+
+REPO = Path(__file__).resolve().parent.parent
+GOLDEN = REPO / "tests" / "data" / "golden_stream.npz"
+
+ENGINES = ("dense", "dense_pallas_fused")
+
+
+def _rand_stream(seed, n, n_types=5, rate=0.3):
+    rng = np.random.default_rng(seed)
+    return EventStream(
+        rng.integers(0, n_types, n).astype(np.int32),
+        np.cumsum(rng.exponential(rate, n)).astype(np.float32), n_types)
+
+
+def _assert_levels_equal(base, got, ctx):
+    assert base.keys() == got.keys(), (ctx, sorted(base), sorted(got))
+    for lvl in base:
+        np.testing.assert_array_equal(
+            base[lvl].symbols, got[lvl].symbols, err_msg=f"{ctx} level {lvl}")
+        np.testing.assert_array_equal(
+            base[lvl].counts, got[lvl].counts, err_msg=f"{ctx} level {lvl}")
+        assert base[lvl].n_candidates == got[lvl].n_candidates, (ctx, lvl)
+
+
+def _assert_corpus_matches_loop(streams, cfg, thresholds=None, ctx=()):
+    res = mine_corpus(streams, cfg, thresholds=thresholds)
+    for i, stream in enumerate(streams):
+        ref_cfg = cfg if thresholds is None else dataclasses.replace(
+            cfg, threshold=thresholds[i])
+        ref = mine_arrays(stream, ref_cfg)
+        _assert_levels_equal(ref, res.per_stream[i], ctx + (i,))
+    return res
+
+
+# ---------------------------------------------------------------------------
+# mine_corpus == per-stream loop: engines x B in {1, 2, 32}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("batch", (1, 2, 32))
+def test_mine_corpus_matches_loop(engine, batch):
+    """Ragged corpus (duplicate timestamps, varied lengths): bit-for-bit
+    parity with the per-stream loop."""
+    rng = np.random.default_rng(batch * 101 + len(engine))
+    streams = []
+    for i in range(batch):
+        n = int(rng.integers(1, 28 if batch == 32 else 90))
+        streams.append(sts._random_stream(
+            np.random.default_rng(1000 * batch + i), n, n_types=4, max_gap=4))
+    cfg = MinerConfig(t_low=0.0, t_high=2.0, threshold=3, max_level=3,
+                      engine=engine)
+    _assert_corpus_matches_loop(streams, cfg, ctx=(engine, batch))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_mine_corpus_seeded_cases(engine):
+    """The shared corpus case builder: all-padding streams every third
+    seed, per-stream thresholds, ragged tails."""
+    for seed in range(8):
+        streams, t_high, thresholds = sts.make_corpus_case(seed)
+        cfg = MinerConfig(t_low=0.0, t_high=t_high, threshold=1, max_level=3,
+                          engine=engine)
+        _assert_corpus_matches_loop(
+            streams, cfg, thresholds=thresholds, ctx=(engine, seed))
+
+
+@pytest.mark.parametrize("engine", ("dense_pallas", "count_scan_write"))
+def test_mine_corpus_other_engines_match_loop(engine):
+    """Engines without any corpus-native method (per-level Pallas, faithful
+    compaction) take the vmap fallback and still match their solo runs."""
+    streams = [_rand_stream(i, n, n_types=4) for i, n in
+               enumerate((45, 20, 33))]
+    kw = dict(t_low=0.0, t_high=1.5, threshold=3, max_level=3, engine=engine)
+    if engine == "count_scan_write":
+        kw.update(cap_occ=16 * 45, max_window=128)
+    _assert_corpus_matches_loop(streams, MinerConfig(**kw), ctx=(engine,))
+
+
+def test_mine_corpus_union_chunking_preserves_parity():
+    """Disjoint per-stream frontiers stack past cfg.max_candidates (a
+    PER-STREAM valve): the union must be counted in chunks — bounding the
+    device gather — without perturbing any stream's results."""
+    rng = np.random.default_rng(7)
+    streams = []
+    for lo_t in (0, 4):                  # types 0-3 vs types 4-7: disjoint
+        n = 80
+        streams.append(EventStream(
+            (rng.integers(0, 4, n) + lo_t).astype(np.int32),
+            np.cumsum(rng.exponential(0.2, n)).astype(np.float32), 8))
+    cfg = MinerConfig(t_low=0.0, t_high=2.0, threshold=3, max_level=3,
+                      max_candidates=16)   # each stream's join = 16, union 32
+    res = _assert_corpus_matches_loop(streams, cfg, ctx=("chunking",))
+    assert res.per_stream[0][2].n_candidates == 16
+    assert res.per_stream[1][2].n_candidates == 16
+
+
+def test_mine_corpus_all_padding_and_duplicate_heavy():
+    """An empty stream and an all-duplicate-timestamp stream ride along
+    with normal ones; every stream still matches its solo run."""
+    dup = EventStream(np.asarray([0, 1, 2, 1, 0], np.int32),
+                      np.zeros(5, np.float32), 4)
+    streams = [_rand_stream(0, 60, n_types=4),
+               EventStream(np.zeros(0, np.int32), np.zeros(0, np.float32), 4),
+               dup,
+               _rand_stream(1, 33, n_types=4)]
+    cfg = MinerConfig(t_low=0.0, t_high=1.0, threshold=2, max_level=3)
+    _assert_corpus_matches_loop(streams, cfg, ctx=("padding",))
+
+
+def test_mine_corpus_level_threshold_override():
+    """A per-level threshold override is shared across streams and beats
+    the per-stream base, exactly as mine_arrays resolves it."""
+    streams = [_rand_stream(i, n) for i, n in enumerate((80, 50, 120))]
+    thresholds = [4, 6, 3]
+    cfg = MinerConfig(t_low=0.1, t_high=2.0, threshold=1,
+                      level_thresholds={2: 9}, max_level=3)
+    _assert_corpus_matches_loop(
+        streams, cfg, thresholds=thresholds, ctx=("lvl-thr",))
+
+
+def test_mine_corpus_engine_agreement():
+    """dense and the fused corpus-native engine mine the same corpus to
+    identical per-stream and aggregate results."""
+    streams = [_rand_stream(i, n) for i, n in enumerate((70, 40, 90, 25))]
+    kw = dict(t_low=0.0, t_high=1.8, threshold=4, max_level=3)
+    base = mine_corpus(streams, MinerConfig(**kw, engine="dense"),
+                       min_streams=2)
+    other = mine_corpus(
+        streams, MinerConfig(**kw, engine="dense_pallas_fused"),
+        min_streams=2)
+    for i in range(len(streams)):
+        _assert_levels_equal(base.per_stream[i], other.per_stream[i], (i,))
+    _assert_levels_equal(base.corpus, other.corpus, ("aggregate",))
+
+
+# ---------------------------------------------------------------------------
+# golden fixture, corpus variant
+# ---------------------------------------------------------------------------
+
+
+def test_mine_corpus_recovers_golden():
+    """The golden stream mined as part of a mixed corpus (twice, alongside
+    a random stream) reproduces the stored frequent sets bit-for-bit, and
+    the >= 2-streams aggregate contains exactly the episodes the two golden
+    copies agree on."""
+    data = np.load(GOLDEN)
+    golden = EventStream(data["types"], data["times"], int(data["n_types"]))
+    noise = _rand_stream(9, 70, n_types=int(data["n_types"]))
+    cfg = MinerConfig(
+        t_low=float(data["t_low"]), t_high=float(data["t_high"]),
+        threshold=int(data["threshold"]), max_level=int(data["max_level"]),
+        max_candidates=int(data["max_candidates"]))
+    res = mine_corpus([golden, noise, golden], cfg, min_streams=2)
+    levels = [int(l) for l in data["levels"]]
+    for s in (0, 2):
+        assert sorted(res.per_stream[s]) == levels
+        for lvl in levels:
+            np.testing.assert_array_equal(
+                res.per_stream[s][lvl].symbols, data[f"level{lvl}_symbols"])
+            np.testing.assert_array_equal(
+                res.per_stream[s][lvl].counts, data[f"level{lvl}_counts"])
+            assert (res.per_stream[s][lvl].n_candidates
+                    == int(data[f"level{lvl}_n_candidates"]))
+    # every golden frequent episode is supported by >= 2 streams (the two
+    # golden copies), so it must appear in the aggregate
+    for lvl in levels:
+        want = {tuple(int(x) for x in row)
+                for row in data[f"level{lvl}_symbols"]}
+        got = {tuple(int(x) for x in row)
+               for row in res.corpus[lvl].symbols}
+        assert want <= got, (lvl, want - got)
+
+
+# ---------------------------------------------------------------------------
+# >= m-streams aggregation semantics
+# ---------------------------------------------------------------------------
+
+
+def test_aggregate_min_streams_support_counts():
+    def la(rows, counts, n):
+        width = 1 if not rows else len(rows[0])
+        return LevelArrays(np.asarray(rows, np.int32).reshape(-1, width),
+                           np.asarray(counts, np.int32), n)
+    per_stream = [
+        {1: la([[0], [1]], [5, 9], 3), 2: la([[0, 1]], [4], 4)},
+        {1: la([[1], [2]], [7, 2], 3), 2: la([[0, 1], [1, 2]], [3, 3], 4)},
+        {1: la([[1]], [4], 3)},          # quiet after level 1
+    ]
+    agg = aggregate_min_streams(per_stream, 2)
+    np.testing.assert_array_equal(agg[1].symbols, [[1]])
+    np.testing.assert_array_equal(agg[1].counts, [3])   # support, not totals
+    assert agg[1].n_candidates == 3                     # union size
+    np.testing.assert_array_equal(agg[2].symbols, [[0, 1]])
+    np.testing.assert_array_equal(agg[2].counts, [2])
+    assert agg[2].n_candidates == 2
+    # m=1 keeps the whole union in lexicographic row order
+    agg1 = aggregate_min_streams(per_stream, 1)
+    np.testing.assert_array_equal(agg1[1].symbols, [[0], [1], [2]])
+    np.testing.assert_array_equal(agg1[1].counts, [1, 3, 1])
+
+
+def test_aggregate_min_streams_validates():
+    with pytest.raises(ValueError, match="min_streams"):
+        aggregate_min_streams([], 0)
+
+
+def test_mine_corpus_min_streams_from_config():
+    streams = [_rand_stream(i, 50) for i in range(3)]
+    cfg = MinerConfig(t_low=0.0, t_high=1.5, threshold=3, max_level=2,
+                      min_streams=3)
+    res = mine_corpus(streams, cfg)
+    assert res.corpus is not None
+    # every aggregate row is frequent in ALL streams here
+    for lvl, agg in res.corpus.items():
+        for row, support in zip(agg.symbols, agg.counts):
+            assert support == 3
+            for ps in res.per_stream:
+                rows = {tuple(int(x) for x in r) for r in ps[lvl].symbols}
+                assert tuple(int(x) for x in row) in rows
+
+
+# ---------------------------------------------------------------------------
+# validation + overflow masking
+# ---------------------------------------------------------------------------
+
+
+def test_mine_corpus_validates_inputs():
+    cfg = MinerConfig(t_low=0.0, t_high=1.0, threshold=1)
+    with pytest.raises(ValueError, match="at least one"):
+        mine_corpus([], cfg)
+    mixed = [_rand_stream(0, 10, n_types=3), _rand_stream(1, 10, n_types=5)]
+    with pytest.raises(ValueError, match="n_types"):
+        mine_corpus(mixed, cfg)
+    with pytest.raises(ValueError, match="thresholds"):
+        mine_corpus([_rand_stream(0, 10)], cfg, thresholds=[1, 2])
+
+
+def test_mine_corpus_overflow_raises_naming_stream():
+    """cfg.cap smaller than one stream's per-type counts: the corpus run
+    raises (naming the stream) exactly when that stream's solo run would."""
+    big = _rand_stream(3, 120, n_types=2)    # ~60 events/type >> cap
+    small = _rand_stream(4, 12, n_types=2)
+    cfg = MinerConfig(t_low=0.0, t_high=2.0, threshold=1, max_level=2, cap=16)
+    with pytest.raises(RuntimeError, match="overflow"):
+        mine_arrays(big, cfg)
+    with pytest.raises(RuntimeError, match="stream 1"):
+        mine_corpus([small, big], cfg)
+
+
+def test_mine_corpus_quiet_stream_overflow_masked():
+    """A stream that is quiet from level 1 (nothing frequent) never counts,
+    so its capacity overflow must NOT poison the corpus — matching the
+    per-stream loop, where its solo run breaks before counting."""
+    big = _rand_stream(3, 120, n_types=2)
+    small = _rand_stream(4, 12, n_types=2)
+    cfg = MinerConfig(t_low=0.0, t_high=2.0, threshold=1, max_level=2, cap=16)
+    thresholds = [1, 10_000]                 # big goes quiet at level 1
+    assert mine_arrays(
+        big, dataclasses.replace(cfg, threshold=10_000)) is not None
+    res = _assert_corpus_matches_loop(
+        [small, big], cfg, thresholds=thresholds, ctx=("quiet-overflow",))
+    assert list(res.per_stream[1]) == [1]    # level 1 only: quiet, masked
+
+
+# ---------------------------------------------------------------------------
+# kernel / dispatch layers
+# ---------------------------------------------------------------------------
+
+
+def test_ops_track_corpus_fold_parity():
+    """ops.track_corpus (stream axis folded into the batch grid) is
+    bit-for-bit the per-stream ops.track_batch stack."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    s, b, n, cap = 3, 4, 3, 24
+    times = np.sort(
+        np.cumsum(rng.exponential(0.4, (s, b, n, cap)), axis=-1), axis=-1
+    ).astype(np.float32)
+    # ragged: pad tails of some rows to +inf
+    times[1, :, :, 17:] = np.inf
+    times[2, 0, 1, :] = np.inf
+    lo = np.zeros((b, n - 1), np.float32)
+    hi = np.full((b, n - 1), 1.5, np.float32)
+    starts, nsup, trunc = ops.track_corpus(
+        times, lo, hi, block_next=8, block_prev=8)
+    for i in range(s):
+        st_i, ns_i, tr_i = ops.track_batch(
+            times[i], lo, hi, block_next=8, block_prev=8)
+        np.testing.assert_array_equal(np.asarray(starts[i]), np.asarray(st_i))
+        np.testing.assert_array_equal(np.asarray(nsup[i]), np.asarray(ns_i))
+        np.testing.assert_array_equal(np.asarray(trunc[i]), np.asarray(tr_i))
+
+
+def test_track_corpus_dispatch_vmap_fallback_matches_native():
+    """Engines without track_corpus fall back to a stream-axis vmap; the
+    fused engine's native fold must agree with the dense fallback."""
+    import jax.numpy as jnp
+    from repro.core import tracking
+    rng = np.random.default_rng(1)
+    s, b, n, cap = 2, 3, 2, 16
+    times = np.sort(
+        np.cumsum(rng.exponential(0.5, (s, b, n, cap)), axis=-1), axis=-1
+    ).astype(np.float32)
+    lo = jnp.zeros((b, n - 1), jnp.float32)
+    hi = jnp.full((b, n - 1), 2.0, jnp.float32)
+    cfg = tracking.EngineConfig()
+    dense = tracking.track_corpus_dispatch("dense", jnp.asarray(times), lo, hi, cfg)
+    fused = tracking.track_corpus_dispatch(
+        "dense_pallas_fused", jnp.asarray(times), lo, hi, cfg)
+    assert dense.starts.shape == fused.starts.shape == (s, b, cap)
+    np.testing.assert_array_equal(np.asarray(dense.valid), np.asarray(fused.valid))
+    np.testing.assert_allclose(
+        np.where(np.asarray(dense.valid), np.asarray(dense.starts), 0.0),
+        np.where(np.asarray(fused.valid), np.asarray(fused.starts), 0.0))
+
+
+def test_count_corpus_indexed_matches_count_batch_indexed():
+    """The corpus counter's per-stream rows == the single-stream batched
+    counter, engine by engine (same index, same candidates)."""
+    import jax.numpy as jnp
+    from repro.core import (count_batch_indexed, count_corpus_indexed,
+                            type_index_batch)
+    streams = [_rand_stream(i, n, n_types=4) for i, n in ((0, 40), (1, 25))]
+    length = max(s.n_events for s in streams)
+    types = np.full((2, length), -1, np.int32)
+    times = np.full((2, length), np.inf, np.float32)
+    for i, s in enumerate(streams):
+        types[i, :s.n_events] = np.asarray(s.types)
+        times[i, :s.n_events] = np.asarray(s.times)
+    tables, counts = type_index_batch(types, times, 4, length)
+    sym = jnp.asarray([[0, 1], [2, 3], [1, 1]], jnp.int32)
+    lo = jnp.zeros((3, 1), jnp.float32)
+    hi = jnp.full((3, 1), 2.0, jnp.float32)
+    for engine in ENGINES:
+        c, keep, ns, ovf = count_corpus_indexed(
+            tables, counts, sym, lo, hi, jnp.asarray([2, 2], jnp.int32),
+            engine=engine)
+        for i in range(2):
+            ci, nsi, ovfi = count_batch_indexed(
+                tables[i], counts[i], sym, lo, hi, engine=engine)
+            np.testing.assert_array_equal(np.asarray(c[i]), np.asarray(ci))
+            np.testing.assert_array_equal(np.asarray(ns[i]), np.asarray(nsi))
+            np.testing.assert_array_equal(np.asarray(ovf[i]), np.asarray(ovfi))
+        np.testing.assert_array_equal(
+            np.asarray(keep), np.asarray(c) >= 2)
+
+
+# ---------------------------------------------------------------------------
+# stream-sharded corpus (subprocess: 8 simulated devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_corpus_sharded_matches_loop_8dev():
+    """slow-marked so the CI multidevice job (no -m filter) is its sole
+    runner — the tests-matrix legs cover the single-device parity cells and
+    already exercise shard_map itself via the sharded-mining smoke."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"),
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "sharded_mining_child.py"),
+         "corpus", "--examples", "25"],
+        env=env, capture_output=True, text=True, timeout=900, cwd=str(REPO))
+    assert r.returncode == 0 and "OK corpus" in r.stdout, r.stdout + r.stderr
+
+
+# ---------------------------------------------------------------------------
+# benchmark harness regression: --only must reject unknown suite names
+# ---------------------------------------------------------------------------
+
+
+def test_bench_run_only_rejects_unknown_suite(monkeypatch, capsys):
+    """`benchmarks/run.py --only typo` must be a loud usage error listing
+    the valid suites — not a silent no-op a CI smoke step exits 0 on."""
+    from benchmarks import run as bench_run
+    monkeypatch.setattr(sys, "argv", ["run.py", "--only", "countign"])
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main()
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "countign" in err and "counting" in err
+
+
+def test_bench_run_suite_name_validation():
+    """Every real suite passes validation; typos and the empty name (a
+    trailing comma) are caught."""
+    from benchmarks import run as bench_run
+    assert bench_run.unknown_suites(list(bench_run.SUITE_NAMES)) == []
+    assert bench_run.unknown_suites(["counting", "countign"]) == ["countign"]
+    assert bench_run.unknown_suites(["counting", ""]) == [""]
+
+
+def test_bench_compare_best_entries_takes_per_cell_min():
+    """The gate's noise retry keeps each (cell, engine)'s fastest entry
+    across sweeps — a transient spike in one run cannot gate, a persistent
+    regression (slow in both) still does."""
+    from benchmarks import run as bench_run
+
+    def e(us, engine="dense"):
+        return {"engine": engine, "scheduler": "scan", "episode_len": 3,
+                "n_events": 256, "batch": 4, "us_per_call": us}
+
+    best = bench_run.best_entries([e(50.0), e(9.0, "fused")],
+                                  [e(12.0), e(30.0, "fused")])
+    by_engine = {b["engine"]: b["us_per_call"] for b in best}
+    assert by_engine == {"dense": 12.0, "fused": 9.0}
+    # persistent slowdown survives the retry and still regresses
+    baseline = [e(10.0)]
+    _, regressions = bench_run.compare_entries(
+        baseline, bench_run.best_entries([e(40.0)], [e(41.0)]),
+        threshold=0.25)
+    assert regressions

@@ -1,7 +1,5 @@
 """Sharding rules, checkpointing, fault tolerance, compression, mining units."""
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +50,7 @@ def test_param_spec_tree_alignment():
     for name, cfg in sorted(REGISTRY.items()):
         m = Model(reduced(cfg))
         shapes = jax.eval_shape(lambda m=m: m.init(jax.random.PRNGKey(0)))
-        sh = rules.tree_shardings(m.param_specs(), shapes)   # raises on mismatch
+        rules.tree_shardings(m.param_specs(), shapes)   # raises on mismatch
         cache_shapes = jax.eval_shape(lambda m=m: m.init_cache(2, 16))
         rules.tree_shardings(m.cache_specs(), cache_shapes)
 

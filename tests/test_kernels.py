@@ -1,7 +1,6 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref

@@ -1,6 +1,5 @@
 """Per-architecture smoke tests (reduced configs): one forward/train step on
 CPU with output-shape and finite-ness asserts, plus decode consistency."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,7 @@
 """End-to-end behaviour tests for the paper's system."""
 import numpy as np
 
-from repro.core import (EventStream, MinerConfig, count_fsm_numpy,
-                        count_nonoverlapped, mine, serial)
+from repro.core import count_fsm_numpy, count_nonoverlapped, serial
 from repro.core.telemetry import TelemetryLog, flag_stragglers
 
 
@@ -45,7 +44,6 @@ def test_telemetry_straggler_detection():
 
 
 def test_serve_loop_smoke():
-    import dataclasses
     import jax
     import jax.numpy as jnp
     from repro.configs import get_config, reduced
