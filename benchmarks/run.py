@@ -128,8 +128,8 @@ def run_compare(baseline_path: str,
     return 0
 
 
-SUITE_NAMES = ("counting", "mining", "corpus", "episode_length", "frequency",
-               "instruction_mix", "distributed")
+SUITE_NAMES = ("counting", "mining", "corpus", "streaming", "episode_length",
+               "frequency", "instruction_mix", "distributed")
 
 
 def unknown_suites(chosen) -> list:
@@ -164,11 +164,12 @@ def main() -> None:
                  f"valid suites: {', '.join(SUITE_NAMES)}")
     from . import (bench_corpus, bench_counting, bench_distributed,
                    bench_episode_length, bench_frequency,
-                   bench_instruction_mix, bench_mining)
+                   bench_instruction_mix, bench_mining, bench_streaming)
     suites = {
         "counting": bench_counting.run,            # paper Figs 9-10 + engine sweep
         "mining": bench_mining.run,                # device-resident miner e2e
         "corpus": bench_corpus.run,                # multi-stream batched miner
+        "streaming": bench_streaming.run,          # incremental append vs remine
         "episode_length": bench_episode_length.run,  # paper Fig 11
         "frequency": bench_frequency.run,          # paper Fig 12
         "instruction_mix": bench_instruction_mix.run,  # paper Table III
@@ -187,5 +188,5 @@ def main() -> None:
         raise SystemExit(1)
 
 
-if __name__ == '__main__':
+if __name__ == "__main__":
     main()

@@ -29,7 +29,9 @@ def main():
         st, en = count_all_occurrences_numpy(s.types, s.times, ep)
         want2 = greedy_numpy(st, en)
         if want != want2:
-            print(f"[{trial}] ORACLE DISAGREEMENT fsm={want} superset-greedy={want2} ep={ep}")
+            print(
+                f"[{trial}] ORACLE DISAGREEMENT fsm={want} "
+                f"superset-greedy={want2} ep={ep}")
             n_fail += 1
             continue
         for engine in ENGINES:
@@ -50,7 +52,8 @@ def main():
             print(f"[{trial}] fsm-scan got={int(got_fsm)} want={want} ep={ep}")
             n_fail += 1
         # mapconcat
-        got_mc = count_mapconcat(s, ep, n_segments=4, ring=48, occ_per_segment=max(64, s.n_events))
+        got_mc = count_mapconcat(s, ep, n_segments=4, ring=48,
+                                 occ_per_segment=max(64, s.n_events))
         if int(got_mc) != want:
             print(f"[{trial}] mapconcat got={int(got_mc)} want={want} ep={ep}")
             n_fail += 1

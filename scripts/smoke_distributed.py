@@ -22,7 +22,8 @@ for trial in range(4):
     fn = make_count_sharded_jit(ep, mesh, n_types=n_types, halo=120)
     got, short, overflow = fn(ty_s, tm_s)
     ok = int(got) == want and not bool(short) and not bool(overflow)
-    print(f"[{trial}] got={int(got)} want={want} short={bool(short)} {time.time()-t0:.1f}s")
+    print(f"[{trial}] got={int(got)} want={want} short={bool(short)} "
+          f"{time.time()-t0:.1f}s")
     if not ok:
         fails += 1
 print("FAILURES:", fails)

@@ -34,10 +34,12 @@ def main():
         params = m.init(jax.random.PRNGKey(1))
         batch = batch_for(cfg)
         try:
-            (loss, metrics), grads = jax.jit(jax.value_and_grad(m.loss, has_aux=True))(params, batch)
+            (loss, metrics), grads = jax.jit(
+                jax.value_and_grad(m.loss, has_aux=True))(params, batch)
             loss = float(loss)
             gflat = jax.tree.leaves(grads)
-            gnorm = float(jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in gflat)))
+            gnorm = float(jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32))) for g in gflat)))
             assert np.isfinite(loss), f"loss NaN {loss}"
             assert np.isfinite(gnorm), "grad NaN"
             # decode

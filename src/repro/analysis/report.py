@@ -73,7 +73,8 @@ def summary(out_dir: str = "experiments/dryrun") -> str:
     n_ok = sum(r["status"] == "ok" for r in rows)
     n_skip = sum(r["status"] == "skipped" for r in rows)
     n_err = len(rows) - n_ok - n_skip
-    return f"{len(rows)} cells: {n_ok} ok, {n_skip} skipped (documented), {n_err} errors"
+    return (f"{len(rows)} cells: {n_ok} ok, {n_skip} skipped (documented), "
+            f"{n_err} errors")
 
 
 if __name__ == "__main__":

@@ -3,18 +3,21 @@
 # (TPU/XLA) execution. See DESIGN.md for the GPU->TPU mapping.
 from .episodes import Episode, serial, episode_batch, episodes_from_rows
 from .events import (EventStream, from_arrays, type_index, type_index_batch,
-                     episode_symbol_times)
+                     type_index_update, grow_type_index, episode_symbol_times)
 from .counting import (CountResult, count_batch, count_batch_indexed,
-                       count_corpus_indexed, count_nonoverlapped,
-                       count_occurrences)
+                       count_batch_indexed_stateful, count_corpus_indexed,
+                       count_nonoverlapped, count_occurrences,
+                       count_tail_batch_indexed)
 from .mining import (MinerConfig, LevelResult, LevelArrays, mine, mine_arrays,
                      mine_sharded, generate_candidates,
                      generate_candidates_arrays)
 from .corpus import (CorpusResult, aggregate_min_streams, mine_corpus,
                      pad_corpus)
+from .streaming import StreamingMiner
 from .tracking import (TrackingEngine, EngineConfig, register_engine,
                        get_engine, engine_names)
-from .statemachine import count_fsm_numpy, count_fsm_scan, greedy_numpy, count_all_occurrences_numpy
+from .statemachine import (count_fsm_numpy, count_fsm_scan, greedy_numpy,
+                           count_all_occurrences_numpy)
 from .mapconcat import count_mapconcat
 from .distributed import (ShardedIndex, build_sharded_index, count_sharded,
                           count_sharded_batch, count_sharded_batch_indexed,
@@ -33,10 +36,11 @@ def __getattr__(name):
 __all__ = [
     "Episode", "serial", "episode_batch", "episodes_from_rows",
     "EventStream", "from_arrays", "type_index", "type_index_batch",
-    "episode_symbol_times",
+    "type_index_update", "grow_type_index", "episode_symbol_times",
     "CountResult", "count_batch", "count_batch_indexed",
-    "count_corpus_indexed", "count_nonoverlapped",
-    "count_occurrences", "ENGINES",
+    "count_batch_indexed_stateful", "count_corpus_indexed",
+    "count_nonoverlapped", "count_occurrences", "count_tail_batch_indexed",
+    "StreamingMiner", "ENGINES",
     "MinerConfig", "LevelResult", "LevelArrays", "mine", "mine_arrays",
     "mine_sharded", "generate_candidates", "generate_candidates_arrays",
     "CorpusResult", "aggregate_min_streams", "mine_corpus", "pad_corpus",

@@ -173,7 +173,9 @@ def mine_corpus(
                 f"thresholds must have shape ({n_streams},), got {thr_base.shape}")
     if min_streams is None:
         min_streams = cfg.min_streams
-    cap = cfg.cap or types.shape[1]
+    # `is None`, not `or`: an explicit cap=0 must hit type_index's loud
+    # ValueError, not silently widen to the padded corpus length
+    cap = types.shape[1] if cfg.cap is None else cfg.cap
 
     if cfg.mesh is not None:
         index = distributed.build_corpus_index(

@@ -69,12 +69,20 @@ def count_occurrences(
     block_prev: int = 256,
     window_tiles: int = 0,
     interpret: Optional[bool] = None,
+    t_min=None,
 ) -> CountResult:
-    """Count on pre-gathered per-symbol time tables (jit/vmap-friendly core)."""
+    """Count on pre-gathered per-symbol time tables (jit/vmap-friendly core).
+
+    ``t_min`` (optional, traced) restricts the count to occurrences seeded
+    at time >= ``t_min`` — equal to counting on the substream of events
+    at/after the cutoff, for every engine (see EngineConfig.t_min).
+    """
     eng = tracking.get_engine(engine)
     cfg = tracking.EngineConfig(
         cap_occ=cap_occ, max_window=max_window, block_next=block_next,
-        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)
+        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret,
+        t_min=t_min)
+    times_by_sym, cfg = tracking.consume_seed_restriction(times_by_sym, cfg)
     occ = eng.track(times_by_sym, t_low, t_high, cfg)
     count = scheduling.greedy_count(occ, parallel=parallel_schedule)
     return CountResult(count=count, n_superset=occ.n_superset, overflow=occ.overflow)
@@ -95,7 +103,10 @@ def count_nonoverlapped(
     interpret: Optional[bool] = None,
 ) -> CountResult:
     """End-to-end count for one episode on one stream (public API)."""
-    cap = cap or max(1, stream.n_events)
+    # `is None`, not `or`: an explicit cap=0 (or any falsy value) must be
+    # honored — events.type_index rejects cap < 1 loudly — instead of
+    # silently behaving like the unset default
+    cap = max(1, stream.n_events) if cap is None else cap
     table, counts = events_lib.type_index(
         stream.types, stream.times, stream.n_types, cap)
     sym, lo, hi = episode.as_arrays()
@@ -107,6 +118,29 @@ def count_nonoverlapped(
         window_tiles=window_tiles, interpret=interpret)
     per_type_overflow = jnp.any(counts > cap)
     return CountResult(res.count, res.n_superset, res.overflow | per_type_overflow)
+
+
+def _greedy_batch_state(occ, prev_end, prev_count, parallel_schedule):
+    """vmap the stateful greedy over batch-leading Occurrences.
+
+    THE one greedy epilogue every batched counter shares — stateless
+    callers pass fresh ``(-inf, 0)`` carries and drop the returned ends.
+    Returns ``(end_out f32[B], count_out i32[B])``.
+    """
+
+    def schedule(starts, ends, valid, pe, pc):
+        one = tracking.Occurrences(
+            starts, ends, valid, jnp.int32(0), jnp.bool_(False))
+        return scheduling.greedy_state(one, pe, pc, parallel=parallel_schedule)
+
+    return jax.vmap(schedule)(
+        occ.starts, occ.ends, occ.valid,
+        jnp.asarray(prev_end, jnp.float32), jnp.asarray(prev_count, jnp.int32))
+
+
+def _fresh_carries(batch: int):
+    return (jnp.full((batch,), -jnp.inf, jnp.float32),
+            jnp.zeros((batch,), jnp.int32))
 
 
 @functools.partial(
@@ -148,14 +182,128 @@ def count_batch_indexed(
         cap_occ=cap_occ, max_window=max_window, block_next=block_next,
         block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)
     occ = tracking.track_batch_dispatch(engine, table[symbols], t_low, t_high, cfg)
-
-    def schedule(starts, ends, valid):
-        one = tracking.Occurrences(
-            starts, ends, valid, jnp.int32(0), jnp.bool_(False))
-        return scheduling.greedy_count(one, parallel=parallel_schedule)
-
-    batch_counts = jax.vmap(schedule)(occ.starts, occ.ends, occ.valid)
+    _, batch_counts = _greedy_batch_state(
+        occ, *_fresh_carries(symbols.shape[0]),
+        parallel_schedule=parallel_schedule)
     return batch_counts, occ.n_superset, occ.overflow | index_overflow
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("engine", "cap_occ", "max_window", "parallel_schedule",
+                     "block_next", "block_prev", "window_tiles", "interpret"),
+)
+def count_batch_indexed_stateful(
+    table: jax.Array,       # f32[n_types, cap] per-type time index
+    counts: jax.Array,      # i32[n_types] true per-type totals (pre-clip)
+    symbols: jax.Array,     # i32[B, N]
+    t_low: jax.Array,       # f32[B, N-1]
+    t_high: jax.Array,      # f32[B, N-1]
+    prev_end: jax.Array,    # f32[B] greedy carry in (-inf for a fresh scan)
+    prev_count: jax.Array,  # i32[B] count carry in (0 for a fresh scan)
+    *,
+    engine: str = "dense",
+    cap_occ: Optional[int] = None,
+    max_window: int = 32,
+    parallel_schedule: bool = False,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """:func:`count_batch_indexed` that threads the greedy chain state.
+
+    Same tracking, same counts — but the scheduler is seeded with
+    ``(prev_end, prev_count)`` per episode and the final carry is returned,
+    so a caller can resume the fold later over intervals that all end at or
+    after this call's (the streaming miner's cold *backfill* path: a newly
+    frequent candidate is counted once over the whole indexed history with
+    a fresh carry, then kept warm by tail-delta recounts).
+
+    Returns ``(counts[B], prev_end[B], n_superset[B], overflow[B])``.
+    """
+    cap = table.shape[1]
+    index_overflow = jnp.any(counts > cap)
+    cfg = tracking.EngineConfig(
+        cap_occ=cap_occ, max_window=max_window, block_next=block_next,
+        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)
+    occ = tracking.track_batch_dispatch(engine, table[symbols], t_low, t_high, cfg)
+    end_out, count_out = _greedy_batch_state(
+        occ, prev_end, prev_count, parallel_schedule=parallel_schedule)
+    return count_out, end_out, occ.n_superset, occ.overflow | index_overflow
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tail_cap", "engine", "cap_occ", "max_window",
+                     "parallel_schedule", "block_next", "block_prev",
+                     "window_tiles", "interpret"),
+)
+def count_tail_batch_indexed(
+    table: jax.Array,       # f32[n_types, cap] per-type time index (updated)
+    counts: jax.Array,      # i32[n_types] per-type totals incl. the new chunk
+    old_counts: jax.Array,  # i32[n_types] per-type totals BEFORE the chunk
+    t_tail_start: jax.Array,  # f32 scalar: suffix cutoff (t_chunk0 - span)
+    symbols: jax.Array,     # i32[B, N]
+    t_low: jax.Array,       # f32[B, N-1]
+    t_high: jax.Array,      # f32[B, N-1]
+    prev_end: jax.Array,    # f32[B] greedy carry through the OLD stream
+    prev_count: jax.Array,  # i32[B]
+    *,
+    tail_cap: int,
+    engine: str = "dense",
+    cap_occ: Optional[int] = None,
+    max_window: int = 32,
+    parallel_schedule: bool = False,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Tail-delta recount: only what one appended chunk can change.
+
+    An occurrence ending at a chunk event spans at most ``span = sum(hi)``
+    back in time, so every event of every such occurrence lies in the
+    stream suffix at/after ``t_tail_start = t_chunk0 - span`` (DESIGN.md
+    §9). This entry gathers a ``tail_cap``-wide *view* of each symbol row —
+    the suffix events for inner symbols, ONLY the chunk's new events for
+    the final symbol (slicing at ``old_counts`` is what keeps duplicate
+    boundary timestamps exact: an old end event tied at the chunk's first
+    time belongs to the already-cached history, not the delta) — tracks it
+    with any registered engine, and folds the resulting intervals onto the
+    carried greedy state. Work is O(B * N * tail_cap * log tail_cap),
+    independent of the indexed stream length.
+
+    Returns ``(counts[B], prev_end[B], n_superset[B], overflow[B],
+    tail_short[B])``; ``tail_short`` flags a view too narrow for some
+    symbol's suffix (the caller re-runs with a wider ``tail_cap`` — flagged,
+    never silently wrong, same convention as every other capacity miss).
+    """
+    cap = table.shape[1]
+    t_tail_start = jnp.asarray(t_tail_start, jnp.float32)
+    # per-type suffix offset: first indexed event at/after the cutoff (one
+    # searchsorted over the [n_types, cap] table, not per candidate row)
+    suffix_start = jax.vmap(
+        lambda row: jnp.searchsorted(row, t_tail_start, side="left"))(
+        table).astype(jnp.int32)                       # [n_types]
+    starts = suffix_start[symbols]                     # [B, N]
+    starts = starts.at[:, -1].set(old_counts[symbols[:, -1]])
+    needed = jnp.minimum(counts, cap)[symbols] - starts
+    tail_short = jnp.any(needed > tail_cap, axis=-1)   # [B]
+    idx = starts[:, :, None] + jnp.arange(tail_cap, dtype=jnp.int32)
+    view = table[symbols[:, :, None], jnp.minimum(idx, cap - 1)]
+    view = jnp.where(idx < cap, view, jnp.inf)         # [B, N, tail_cap]
+
+    index_overflow = jnp.any(counts > cap)
+    cfg = tracking.EngineConfig(
+        cap_occ=cap_occ, max_window=max_window, block_next=block_next,
+        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret,
+        t_min=t_tail_start)
+    occ = tracking.track_batch_dispatch(engine, view, t_low, t_high, cfg)
+    end_out, count_out = _greedy_batch_state(
+        occ, prev_end, prev_count, parallel_schedule=parallel_schedule)
+    return (count_out, end_out, occ.n_superset,
+            occ.overflow | index_overflow, tail_short)
 
 
 @functools.partial(

@@ -71,7 +71,10 @@ def type_index(
 
     Args:
       types: int32[n], times: float32[n] (time-sorted).
-      n_types: alphabet size. cap: static per-type capacity.
+      n_types: alphabet size. cap: static per-type capacity (>= 1: a zero
+        capacity would make every downstream searchsorted/gather degenerate,
+        so an explicit ``cap=0`` is rejected loudly instead of behaving like
+        the old falsy-default bug that silently treated it as "unset").
 
     Returns:
       times_by_type: float32[n_types, cap], each row the (sorted ascending)
@@ -86,6 +89,8 @@ def type_index(
     row ``n_types - 1``, inflating its count and racing +inf writes against
     that type's real times.
     """
+    if cap < 1:
+        raise ValueError(f"type index cap must be >= 1, got {cap}")
     types = jnp.asarray(types, jnp.int32)
     times = jnp.asarray(times, jnp.float32)
     types = jnp.where(types < 0, n_types, types)   # out of bounds -> dropped
@@ -95,6 +100,58 @@ def type_index(
     table = jnp.full((n_types, cap), INF, jnp.float32)
     table = table.at[types, onehot_free_rank].set(times, mode="drop")
     return table, counts
+
+
+def type_index_update(
+    table: jax.Array,    # f32[n_types, cap] existing index (+inf padded)
+    counts: jax.Array,   # i32[n_types] true per-type totals so far
+    types: jax.Array,    # i32[m] appended chunk, time-sorted, -1 padding
+    times: jax.Array,    # f32[m]
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter ONE appended chunk into an existing type index (incremental).
+
+    The streaming miner's twin of :func:`type_index`: instead of rebuilding
+    the ``[n_types, cap]`` table from the whole stream, only the ``m`` new
+    events are ranked (within the chunk) and scattered at offsets
+    ``counts[type]`` — O(m log m) work independent of the stream length.
+    Because appended times are >= every indexed time and the within-type
+    rank is stable, the result is bit-for-bit the table :func:`type_index`
+    would build from the concatenated stream (regression-tested).
+
+    Negative types are padding and contribute nothing: they are remapped out
+    of bounds *before* the scatters for the same reason as in
+    :func:`type_index` (jax scatter wraps, so a raw ``-1`` would corrupt the
+    last type's row). Events past ``cap`` per type are dropped from the
+    table but still counted — the caller grows the table first
+    (:func:`grow_type_index`) when ``counts + chunk`` would overflow.
+    """
+    n_types = table.shape[0]
+    types = jnp.asarray(types, jnp.int32)
+    times = jnp.asarray(times, jnp.float32)
+    types = jnp.where(types < 0, n_types, types)   # out of bounds -> dropped
+    rank = _rank_within_type(types, n_types)
+    # clip only the *gather* of per-type offsets (row n_types has no count);
+    # the scatters still see the out-of-bounds row and drop it
+    pos = counts[jnp.minimum(types, n_types - 1)] + rank
+    new_table = table.at[types, pos].set(times, mode="drop")
+    new_counts = counts.at[types].add(1, mode="drop")
+    return new_table, new_counts
+
+
+def grow_type_index(table: jax.Array, new_cap: int) -> jax.Array:
+    """Widen a type index to ``new_cap`` columns (+inf fill, contents kept).
+
+    The streaming miner grows capacity *geometrically* (see
+    ``streaming.StreamingMiner``), so reallocation (and the recompile a new
+    static width implies) happens O(log n) times over a stream's life.
+    """
+    n_types, cap = table.shape
+    if new_cap < cap:
+        raise ValueError(f"cannot shrink type index: {cap} -> {new_cap}")
+    if new_cap == cap:
+        return table
+    pad = jnp.full((n_types, new_cap - cap), INF, jnp.float32)
+    return jnp.concatenate([table, pad], axis=1)
 
 
 def type_index_batch(

@@ -91,7 +91,15 @@ class LevelArrays:
 
 
 def _pad_to(n: int) -> int:
-    return max(MAX_BATCH_PAD, ((n + MAX_BATCH_PAD - 1) // MAX_BATCH_PAD) * MAX_BATCH_PAD)
+    return max(MAX_BATCH_PAD,
+               ((n + MAX_BATCH_PAD - 1) // MAX_BATCH_PAD) * MAX_BATCH_PAD)
+
+
+def _resolve_cap(cfg: MinerConfig, stream: EventStream) -> int:
+    """Explicit cfg.cap wins even when falsy (`is None`, not `or`: a cap of
+    0 must surface as events.type_index's loud ValueError, not silently
+    become the per-stream default — the old idiom hid exactly that bug)."""
+    return max(1, stream.n_events) if cfg.cap is None else cfg.cap
 
 
 def generate_candidates(
@@ -181,7 +189,7 @@ def count_candidates(
     bp = _pad_to(b)
     padded = list(candidates) + [candidates[0]] * (bp - b)
     sym, lo, hi = episode_batch(padded)
-    cap = cfg.cap or max(1, stream.n_events)
+    cap = _resolve_cap(cfg, stream)
     counts, _, overflow = counting.count_batch(
         stream.types, stream.times, sym, lo, hi,
         n_types=stream.n_types, cap=cap, engine=cfg.engine,
@@ -284,7 +292,7 @@ def mine_arrays(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelArrays]
     """
     if cfg.mesh is not None:
         return mine_sharded(stream, cfg)
-    cap = cfg.cap or max(1, stream.n_events)
+    cap = _resolve_cap(cfg, stream)
     table, type_counts = events_lib.type_index(
         stream.types, stream.times, stream.n_types, cap)   # built ONCE
 
@@ -321,7 +329,8 @@ def mine_sharded(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelArrays
     """
     if cfg.mesh is None:
         raise ValueError("mine_sharded requires cfg.mesh")
-    n_shards = cfg.n_shards or cfg.mesh.shape[cfg.shard_axis]
+    n_shards = (cfg.mesh.shape[cfg.shard_axis] if cfg.n_shards is None
+                else cfg.n_shards)
     ty, tm = distributed.shard_stream(stream.types, stream.times, n_shards)
     index = distributed.build_sharded_index(
         jnp.asarray(ty), jnp.asarray(tm), cfg.mesh, axis=cfg.shard_axis,

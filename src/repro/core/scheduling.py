@@ -17,6 +17,18 @@ very small overhead"). We provide:
 
 Both require input sorted ascending by end time with invalid entries
 parked at ``end=+inf, start=-inf`` (the Occurrences convention).
+
+Chain-state carry: both schedulers also exist in a *stateful* form
+(:func:`greedy_scan_state` / :func:`greedy_parallel_state`, dispatched by
+:func:`greedy_state`) that seeds the scan with ``(prev_end, count)`` and
+returns the final pair. The greedy is a left fold, so running it over an
+end-sorted prefix and carrying the state into the (end-sorted) remainder
+gives exactly the whole-list answer — this is the stitch the sharded merge
+performs at shard boundaries (core/distributed.py gathers and re-scans) and
+the one the streaming miner performs at the old stream end: every appended
+chunk's occurrence intervals end at-or-after every cached interval's end,
+so ``append`` resumes each episode's cached ``(prev_end, count)`` instead
+of re-scheduling the whole history (core/streaming.py, DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -29,18 +41,34 @@ from .tracking import Occurrences, build_sparse_table
 NEG = -jnp.inf
 
 
-def greedy_scan(occ: Occurrences) -> jax.Array:
-    """Paper Algorithm 1: sequential greedy count (jittable)."""
+def greedy_scan_state(
+    occ: Occurrences, prev_end: jax.Array, count: jax.Array
+) -> tuple:
+    """Paper Algorithm 1 seeded with carried state; returns the final state.
+
+    ``prev_end`` is the end time of the last interval taken so far (``-inf``
+    for a fresh scan) and ``count`` the intervals taken so far; the strict
+    ``start > prev_end`` tie rule (DESIGN.md §3) is what makes the carry
+    exact at duplicate boundary timestamps.
+    """
 
     def step(carry, x):
-        prev_e, count = carry
+        prev_e, cnt = carry
         s, e, v = x
         take = v & (s > prev_e)
-        return (jnp.where(take, e, prev_e), count + take.astype(jnp.int32)), None
+        return (jnp.where(take, e, prev_e), cnt + take.astype(jnp.int32)), None
 
-    (_, count), _ = lax.scan(
-        step, (jnp.float32(NEG), jnp.int32(0)), (occ.starts, occ.ends, occ.valid)
+    carry, _ = lax.scan(
+        step,
+        (jnp.asarray(prev_end, jnp.float32), jnp.asarray(count, jnp.int32)),
+        (occ.starts, occ.ends, occ.valid),
     )
+    return carry
+
+
+def greedy_scan(occ: Occurrences) -> jax.Array:
+    """Paper Algorithm 1: sequential greedy count (jittable)."""
+    _, count = greedy_scan_state(occ, jnp.float32(NEG), jnp.int32(0))
     return count
 
 
@@ -60,9 +88,17 @@ def _first_greater(table: jax.Array, values: jax.Array) -> jax.Array:
     return pos
 
 
-def greedy_parallel(occ: Occurrences) -> jax.Array:
-    """Beyond-paper parallel scheduler; identical count to greedy_scan."""
+def greedy_parallel_state(
+    occ: Occurrences, prev_end: jax.Array, count: jax.Array
+) -> tuple:
+    """Binary-lifting scheduler seeded with carried state; returns final state.
+
+    Identical fold to :func:`greedy_scan_state` (the entry point becomes the
+    first end-sorted interval with ``start > prev_end`` instead of the first
+    valid interval), so the streaming stitch can run either scheduler.
+    """
     cap = occ.starts.shape[0]
+    prev_end = jnp.asarray(prev_end, jnp.float32)
     s = jnp.where(occ.valid, occ.starts, NEG)
     e = jnp.where(occ.valid, occ.ends, jnp.inf)
     table = build_sparse_table(s)
@@ -70,7 +106,7 @@ def greedy_parallel(occ: Occurrences) -> jax.Array:
     # successor of interval i = first j with s_j > e_i (j > i holds because
     # s_j <= e_j and ends are sorted); sink index = cap
     nxt = _first_greater(table, e)                      # i32[cap]
-    entry = _first_greater(table, jnp.float32(NEG)[None])[0]
+    entry = _first_greater(table, prev_end[None])[0]
 
     jump = jnp.concatenate([nxt, jnp.array([cap], jnp.int32)])  # [cap+1]; sink -> sink
 
@@ -90,8 +126,32 @@ def greedy_parallel(occ: Occurrences) -> jax.Array:
         take = nxt_pos < cap
         jumps = jumps + jnp.where(take, jnp.int32(1 << k), 0)
         pos = jnp.where(take, nxt_pos, pos)
-    return jumps + (entry < cap).astype(jnp.int32)
+    took_any = entry < cap
+    final_end = jnp.where(took_any, e[jnp.minimum(pos, cap - 1)], prev_end)
+    total = jnp.asarray(count, jnp.int32) + jumps + took_any.astype(jnp.int32)
+    return final_end, total
+
+
+def greedy_parallel(occ: Occurrences) -> jax.Array:
+    """Beyond-paper parallel scheduler; identical count to greedy_scan."""
+    _, count = greedy_parallel_state(occ, jnp.float32(NEG), jnp.int32(0))
+    return count
 
 
 def greedy_count(occ: Occurrences, parallel: bool = False) -> jax.Array:
     return greedy_parallel(occ) if parallel else greedy_scan(occ)
+
+
+def greedy_state(
+    occ: Occurrences,
+    prev_end: jax.Array,
+    count: jax.Array,
+    parallel: bool = False,
+) -> tuple:
+    """Greedy fold over ``occ`` seeded with ``(prev_end, count)``.
+
+    Returns the final ``(prev_end, count)`` — the carry the streaming miner
+    caches per episode between appends.
+    """
+    fn = greedy_parallel_state if parallel else greedy_scan_state
+    return fn(occ, prev_end, count)

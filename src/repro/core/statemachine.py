@@ -182,7 +182,8 @@ def count_fsm_scan(
                 new_bufs.at[j, new_heads[j]].set(t),
                 new_bufs,
             )
-            new_heads = jnp.where(add, new_heads.at[j].set((new_heads[j] + 1) % ring), new_heads)
+            new_heads = jnp.where(
+                add, new_heads.at[j].set((new_heads[j] + 1) % ring), new_heads)
 
         # on completion: clear everything, bump count
         new_bufs = jnp.where(completes, jnp.full_like(bufs, NEG), new_bufs)

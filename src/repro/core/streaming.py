@@ -1,0 +1,322 @@
+"""Streaming miner: absorb appended spike chunks incrementally (DESIGN.md §9).
+
+The paper's pitch is closing the latency gap between recording and analysis;
+its companion work (*Towards Chip-on-Chip Neuroscience*) makes the loop
+explicit — spikes arrive continuously and the mining result should track
+them. Every batch entry point in this repo (``mine``, ``mine_arrays``,
+``mine_sharded``, ``mine_corpus``) remines the full stream from scratch;
+:class:`StreamingMiner` instead keeps the whole mining state device-resident
+between calls and makes ``append(types, times)`` cost work proportional to
+the *chunk*, not the stream:
+
+* **Incremental index** — the per-type time table (the paper's §IV-A
+  pre-process) persists across appends; each chunk is scattered into it at
+  per-type offsets (:func:`events.type_index_update`), with geometric
+  capacity growth (:func:`events.grow_type_index`) so reallocation — and
+  the recompile a new static width implies — happens O(log n) times over a
+  stream's life. The index *is* the device append buffer: each row is that
+  type's events in arrival order.
+
+* **Tail-delta recount** — an occurrence ending at a chunk event reaches at
+  most ``span = sum(t_high)`` back in time, so only the span-bounded stream
+  suffix can seed new occurrences. Tracking runs on a narrow suffix view
+  whose final-symbol row holds *only* the chunk's events
+  (:func:`counting.count_tail_batch_indexed`, threading the ``t_min``
+  cutoff through the engine config), and the resulting intervals — all
+  ending at/after every cached interval's end — are folded onto each
+  episode's cached greedy chain state (:func:`scheduling.greedy_state`).
+  This is the same stitch the sharded miner performs at shard boundaries
+  (core/distributed.py), with the boundary at the old stream end.
+
+* **Warm frontier, scoped backfill** — non-overlapped counts are monotone
+  under appends (old occurrence intervals never change; chunks only add
+  intervals), so frequent episodes stay frequent and their cached chain
+  states stay warm. A candidate first reached when a sub-episode *becomes*
+  frequent has no cached state; exactly those rows are backfilled once over
+  the whole indexed history (:func:`counting.count_batch_indexed_stateful`)
+  and kept warm from then on. Both paths for a level are dispatched before
+  a single ``device_get`` — one host sync per level per append, the same
+  budget as the batch miners.
+
+``append`` returns the full-stream per-level result, bit-for-bit what
+``mine_arrays`` returns for the concatenated stream (differentially tested
+across engines and chunkings, including duplicate boundary timestamps and
+all-padding chunks) — equivalence holds whenever the cold run itself does
+not overflow its static capacities.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import counting
+from . import events as events_lib
+from .events import EventStream
+from .mining import (_OVERFLOW_MSG, LevelArrays, MinerConfig, _prune_level,
+                     generate_candidates_arrays, pad_candidate_rows)
+
+_TAIL_SHORT_MSG = (
+    "streaming tail view narrower than a symbol's span-bounded suffix; "
+    "this is a StreamingMiner sizing bug (host and device suffix bounds "
+    "disagree) — please report")
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(4, int(n - 1).bit_length()) if n > 1 else 16
+
+
+@dataclasses.dataclass
+class _ChainState:
+    """Cached greedy chain state of one episode through append ``seq``."""
+
+    prev_end: float   # end time of the last interval the greedy took
+    count: int        # non-overlapped count over the whole stream so far
+    seq: int          # last append this state was advanced through
+
+
+class StreamingMiner:
+    """Device-resident incremental level-wise miner (one stream, appends).
+
+    Args:
+      n_types: event-type alphabet size (fixed for the stream's life).
+      cfg: the usual :class:`MinerConfig`. ``cfg.cap`` seeds the initial
+        per-type capacity (it *grows* geometrically as events arrive, so it
+        is a hint, not a limit); ``cfg.mesh`` is rejected — the streaming
+        state machine is single-device.
+      initial_cap: overrides the initial per-type capacity (default:
+        ``cfg.cap``, else 256).
+      growth: capacity growth factor (> 1) for the per-type index.
+
+    ``append(types, times) -> Dict[int, LevelArrays]`` absorbs one
+    time-sorted chunk (``types < 0`` / non-finite times are padding and are
+    dropped, so fixed-size device feeds can hand their buffers over as-is)
+    and returns the per-level frequent episodes of the whole stream so far.
+    """
+
+    def __init__(self, n_types: int, cfg: MinerConfig, *,
+                 initial_cap: Optional[int] = None, growth: float = 2.0):
+        if cfg.mesh is not None:
+            raise ValueError("StreamingMiner is single-device; cfg.mesh must "
+                             "be None (shard whole streams, not the tail)")
+        if growth <= 1.0:
+            raise ValueError(f"growth must be > 1, got {growth}")
+        if n_types < 1:
+            raise ValueError(f"n_types must be >= 1, got {n_types}")
+        self.n_types = int(n_types)
+        self.cfg = cfg
+        self.growth = float(growth)
+        if initial_cap is None:
+            initial_cap = 256 if cfg.cap is None else cfg.cap
+        self.cap = max(1, initial_cap)
+        self.table = jnp.full((self.n_types, self.cap), jnp.inf, jnp.float32)
+        self.counts_dev = jnp.zeros((self.n_types,), jnp.int32)
+        self.counts = np.zeros((self.n_types,), np.int64)  # exact host mirror
+        self.n_events = 0
+        self.last_time = -np.inf
+        self.seq = 0              # appends absorbed (empty chunks excluded)
+        # host copies of the accepted events (amortized-growth buffers, so
+        # appends stay O(chunk), not O(stream)): they size the tail view
+        # exactly and let tests/demos rebuild the cold reference stream
+        self._buf_types = np.empty((1024,), np.int32)
+        self._buf_times = np.empty((1024,), np.float32)
+        self._cache: Dict[int, Dict[tuple, _ChainState]] = {}
+        self._results: Optional[Dict[int, LevelArrays]] = None
+
+    # -- public surface ----------------------------------------------------
+
+    @property
+    def _all_types(self) -> np.ndarray:
+        return self._buf_types[:self.n_events]
+
+    @property
+    def _all_times(self) -> np.ndarray:
+        return self._buf_times[:self.n_events]
+
+    def stream(self) -> EventStream:
+        """The accepted events so far, as a host-side EventStream."""
+        return EventStream(self._all_types.copy(), self._all_times.copy(),
+                           self.n_types)
+
+    @property
+    def results(self) -> Dict[int, LevelArrays]:
+        """Per-level result of the last append (computed if never mined)."""
+        if self._results is None:
+            self._results = self._mine_levels(t_tail_start=None, tail_cap=0,
+                                              old_counts_dev=self.counts_dev)
+        return dict(self._results)
+
+    def append(self, types, times) -> Dict[int, LevelArrays]:
+        types = np.asarray(types, np.int32).reshape(-1)
+        times = np.asarray(times, np.float32).reshape(-1)
+        if types.shape != times.shape:
+            raise ValueError("types/times length mismatch")
+        keep = (types >= 0) & np.isfinite(times)
+        types, times = types[keep], times[keep]
+        if types.size == 0:
+            return self.results         # nothing can change (already a copy)
+        if np.any(types >= self.n_types):
+            raise ValueError("event types out of range")
+        if np.any(np.diff(times) < 0) or times[0] < self.last_time:
+            raise ValueError("appended chunk must be time-sorted and start "
+                             "at/after the last appended event")
+
+        # 1) incremental index: grow-if-needed, then scatter ONLY the chunk
+        old_counts_dev = self.counts_dev
+        self.counts = self.counts + np.bincount(types, minlength=self.n_types)
+        needed = int(self.counts.max())
+        if needed > self.cap:
+            new_cap = self.cap
+            while new_cap < needed:
+                new_cap = max(new_cap + 1, int(new_cap * self.growth))
+            self.table = events_lib.grow_type_index(self.table, new_cap)
+            self.cap = new_cap
+        self.table, self.counts_dev = events_lib.type_index_update(
+            self.table, self.counts_dev, types, times)
+        if self.n_events + types.size > self._buf_times.size:
+            new_size = max(self.n_events + int(types.size),
+                           2 * self._buf_times.size)
+            self._buf_types = np.concatenate(
+                [self._all_types, np.empty((new_size - self.n_events,),
+                                           np.int32)])
+            self._buf_times = np.concatenate(
+                [self._all_times, np.empty((new_size - self.n_events,),
+                                           np.float32)])
+        self._buf_types[self.n_events:self.n_events + types.size] = types
+        self._buf_times[self.n_events:self.n_events + types.size] = times
+        self.n_events += int(types.size)
+        self.last_time = float(times[-1])
+        self.seq += 1
+
+        # 2) span-bounded suffix cutoff: occurrences ending at chunk events
+        # start at/after t_chunk0 - span. The engines compare gaps in f32
+        # (`t_prev >= t_next - hi`), so each of the up-to-(max_level - 1)
+        # hops can admit ~an ulp of absolute error at the magnitude of the
+        # times / t_high involved — the slack must be ABSOLUTE at that
+        # scale, not relative at t0's (t0 can sit near zero while the
+        # stream lives at large magnitudes). Extra history in the view is
+        # provably harmless; a missing seed would not be.
+        span = (self.cfg.max_level - 1) * float(self.cfg.t_high)
+        scale = max(abs(float(times[0])), abs(float(times[-1])), span)
+        slack = 8.0 * self.cfg.max_level * float(np.spacing(np.float32(scale)))
+        t0 = np.float32(np.float64(times[0]) - span - slack)
+        t0 = np.nextafter(t0, np.float32(-np.inf), dtype=np.float32)
+        # exact host sizing of the widest per-type suffix
+        i0 = int(np.searchsorted(self._all_times, t0, side="left"))
+        suffix = np.bincount(self._all_types[i0:], minlength=self.n_types)
+        tail_cap = _next_pow2(int(suffix.max()))
+
+        self._results = self._mine_levels(
+            t_tail_start=t0, tail_cap=tail_cap, old_counts_dev=old_counts_dev)
+        # evict chain states not advanced through THIS append: warmth next
+        # append requires seq == self.seq, so anything older can only ever
+        # be re-counted cold — keeping it would grow the cache with every
+        # candidate ever seen instead of the live candidate set
+        for cache in self._cache.values():
+            stale = [k for k, st in cache.items() if st.seq != self.seq]
+            for k in stale:
+                del cache[k]
+        return dict(self._results)   # a copy: mutating it must not corrupt
+                                     # the cached results the next (empty)
+                                     # append or `.results` read returns
+
+    # -- level loop (mirrors mining._mine_levels' control flow exactly) ----
+
+    def _mine_levels(self, *, t_tail_start, tail_cap, old_counts_dev):
+        cfg = self.cfg
+        binc = self.counts
+        freq_types = np.nonzero(binc >= cfg.threshold)[0].astype(np.int32)
+        results = {1: _prune_level(freq_types, binc, self.n_types)}
+        frontier = results[1].symbols
+        for level in range(2, cfg.max_level + 1):
+            if frontier.shape[0] == 0:
+                break
+            cands = generate_candidates_arrays(frontier, level, cfg)
+            b = cands.shape[0]
+            if b == 0:
+                results[level] = LevelArrays(
+                    np.zeros((0, level), np.int32), np.zeros((0,), np.int32), 0)
+                break
+            thr = (cfg.level_thresholds or {}).get(level, cfg.threshold)
+            counts_h = self._count_candidates(
+                level, cands, t_tail_start, tail_cap, old_counts_dev)
+            keep = counts_h >= thr
+            frontier = cands[keep]
+            results[level] = LevelArrays(
+                frontier, counts_h[keep].astype(np.int32), b)
+        return results
+
+    def _count_candidates(self, level, cands, t_tail_start, tail_cap,
+                          old_counts_dev) -> np.ndarray:
+        """Count one level's candidate rows: warm tail-delta + cold backfill.
+
+        Warm = a chain state advanced through the previous append exists
+        (frequent episodes — and still-infrequent candidates — are recounted
+        every append, so they stay warm for as long as they stay joined).
+        Everything else is backfilled over the whole indexed history. Both
+        dispatches are fetched in ONE ``device_get``.
+        """
+        cfg = self.cfg
+        cache = self._cache.setdefault(level, {})
+        keys = [tuple(int(x) for x in row) for row in cands]
+        warm_idx, cold_idx = [], []
+        for i, key in enumerate(keys):
+            st = cache.get(key)
+            if (t_tail_start is not None and st is not None
+                    and st.seq == self.seq - 1):
+                warm_idx.append(i)
+            else:
+                cold_idx.append(i)
+
+        knobs = dict(
+            engine=cfg.engine, cap_occ=cfg.cap_occ, max_window=cfg.max_window,
+            parallel_schedule=cfg.parallel_schedule, block_next=cfg.block_next,
+            block_prev=cfg.block_prev, window_tiles=cfg.window_tiles,
+            interpret=cfg.interpret)
+        dispatched = []
+        if warm_idx:
+            sym, lo, hi = pad_candidate_rows(cands[np.asarray(warm_idx)],
+                                             level, cfg)
+            bp = int(sym.shape[0])
+            pe = np.full((bp,), -np.inf, np.float32)
+            pc = np.zeros((bp,), np.int32)
+            for j, i in enumerate(warm_idx):
+                st = cache[keys[i]]
+                pe[j], pc[j] = st.prev_end, st.count
+            # padding rows repeat episode 0 — give them its carry too (their
+            # results are computed and discarded, same as the batch miners)
+            pe[len(warm_idx):] = pe[0]
+            pc[len(warm_idx):] = pc[0]
+            dispatched.append(("warm", warm_idx, counting.count_tail_batch_indexed(
+                self.table, self.counts_dev, old_counts_dev,
+                np.float32(t_tail_start), sym, lo, hi,
+                jnp.asarray(pe), jnp.asarray(pc), tail_cap=tail_cap, **knobs)))
+        if cold_idx:
+            sym, lo, hi = pad_candidate_rows(cands[np.asarray(cold_idx)],
+                                             level, cfg)
+            bp = int(sym.shape[0])
+            dispatched.append(("cold", cold_idx, counting.count_batch_indexed_stateful(
+                self.table, self.counts_dev, sym, lo, hi,
+                jnp.full((bp,), -jnp.inf, jnp.float32),
+                jnp.zeros((bp,), jnp.int32), **knobs)))
+
+        counts_out = np.zeros((len(keys),), np.int64)
+        fetched = jax.device_get([d[2] for d in dispatched])  # ONE sync
+        for (kind, idxs, _), vals in zip(dispatched, fetched):
+            m = len(idxs)
+            if kind == "warm":
+                cnt, pend, _nsup, overflow, tail_short = vals
+                if bool(np.any(tail_short[:m])):
+                    raise RuntimeError(_TAIL_SHORT_MSG)
+            else:
+                cnt, pend, _nsup, overflow = vals
+            if bool(np.any(overflow[:m])):
+                raise RuntimeError(_OVERFLOW_MSG)
+            for j, i in enumerate(idxs):
+                counts_out[i] = int(cnt[j])
+                cache[keys[i]] = _ChainState(
+                    prev_end=float(pend[j]), count=int(cnt[j]), seq=self.seq)
+        return counts_out

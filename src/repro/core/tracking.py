@@ -247,6 +247,14 @@ class EngineConfig:
     buffers; ``block_next``/``block_prev``/``window_tiles`` are the Pallas
     kernel's tile shape and grid-pruning bound; ``interpret=None`` lets the
     kernel layer decide (interpret mode anywhere but TPU).
+
+    ``t_min`` restricts tracking to occurrences *seeded* at time >= t_min
+    (windows only look backward, so this equals counting on the substream of
+    events at/after ``t_min``). It is a traced value, not a static knob — the
+    streaming miner passes a new cutoff every append without recompiling.
+    The restriction is applied engine-agnostically at the dispatch layer
+    (:func:`restrict_seed_row` shifts pre-cutoff events out of the
+    first-symbol row), so every registered engine honors it identically.
     """
 
     cap_occ: Optional[int] = None
@@ -255,6 +263,45 @@ class EngineConfig:
     block_prev: int = 256
     window_tiles: int = 0
     interpret: Optional[bool] = None
+    t_min: Optional[jax.Array] = None
+
+
+def restrict_seed_row(times_by_sym: jax.Array, t_min) -> jax.Array:
+    """Drop first-symbol events before ``t_min`` from ``[..., N, cap]`` rows.
+
+    The seed row is shifted left past its first index with time >= ``t_min``
+    and +inf-refilled — it stays sorted, so no engine needs to know the
+    restriction happened. Only the seed row is touched: earlier events of
+    *later* symbols cannot appear in any occurrence seeded at/after
+    ``t_min`` anyway (chains run forward in time), and leaving them in place
+    keeps the transform O(cap) instead of O(N * cap).
+    """
+    row0 = times_by_sym[..., 0, :]
+    cap = row0.shape[-1]
+    t_min = jnp.asarray(t_min, jnp.float32)
+    flat = row0.reshape(-1, cap)
+    k = jax.vmap(
+        lambda r: jnp.searchsorted(r, t_min, side="left"))(flat).astype(jnp.int32)
+    idx = k[:, None] + jnp.arange(cap, dtype=jnp.int32)[None, :]
+    shifted = jnp.take_along_axis(flat, jnp.minimum(idx, cap - 1), axis=-1)
+    shifted = jnp.where(idx < cap, shifted, jnp.inf).reshape(row0.shape)
+    return jnp.concatenate(
+        [shifted[..., None, :], times_by_sym[..., 1:, :]], axis=-2)
+
+
+def consume_seed_restriction(
+    times_by_sym: jax.Array, cfg: EngineConfig
+) -> Tuple[jax.Array, EngineConfig]:
+    """Apply ``cfg.t_min`` to the tables and strip it from the config.
+
+    Called once at each dispatch altitude (single episode, batch, corpus)
+    so engines — including future natively-batched ones — can never
+    double-apply the restriction.
+    """
+    if cfg.t_min is None:
+        return times_by_sym, cfg
+    return (restrict_seed_row(times_by_sym, cfg.t_min),
+            dataclasses.replace(cfg, t_min=None))
 
 
 class TrackingEngine(Protocol):
@@ -302,7 +349,8 @@ class TrackingEngine(Protocol):
 _REGISTRY: Dict[str, TrackingEngine] = {}
 
 
-def register_engine(engine: TrackingEngine, *, overwrite: bool = False) -> TrackingEngine:
+def register_engine(engine: TrackingEngine, *,
+                    overwrite: bool = False) -> TrackingEngine:
     if engine.name in _REGISTRY and not overwrite:
         raise ValueError(f"engine {engine.name!r} already registered")
     _REGISTRY[engine.name] = engine
@@ -341,6 +389,7 @@ def track_batch_dispatch(
     ``[B, cap]``, ``n_superset``/``overflow`` are ``[B]``.
     """
     eng = get_engine(engine) if isinstance(engine, str) else engine
+    times_by_sym, cfg = consume_seed_restriction(times_by_sym, cfg)
     track_batch = getattr(eng, "track_batch", None)
     if track_batch is not None:
         return track_batch(times_by_sym, t_low, t_high, cfg)
@@ -371,6 +420,7 @@ def track_corpus_dispatch(
     ``[S, B, cap]``, ``n_superset``/``overflow`` are ``[S, B]``.
     """
     eng = get_engine(engine) if isinstance(engine, str) else engine
+    times_by_sym, cfg = consume_seed_restriction(times_by_sym, cfg)
     track_corpus = getattr(eng, "track_corpus", None)
     if track_corpus is not None:
         return track_corpus(times_by_sym, t_low, t_high, cfg)
@@ -400,9 +450,12 @@ class FaithfulEngine:
 
     def track(self, times_by_sym, t_low, t_high, cfg: EngineConfig) -> Occurrences:
         cap = times_by_sym.shape[1]
+        # `is None`, not `or`: an explicit cap_occ=0 must be rejected by
+        # track_faithful's capacity check, not silently widened to cap
+        cap_occ = cap if cfg.cap_occ is None else cfg.cap_occ
         occ = track_faithful(
             times_by_sym, t_low, t_high,
-            cap_occ=cfg.cap_occ or cap, max_window=cfg.max_window,
+            cap_occ=cap_occ, max_window=cfg.max_window,
             method=self.method, direction=self.direction)
         return sort_by_end(occ) if self.sort_output else occ
 
@@ -507,7 +560,8 @@ class FusedDensePallasEngine:
             times_by_sym[None], t_low[None], t_high[None], cfg)
         return Occurrences(*(x[0] for x in occ))
 
-    def track_batch(self, times_by_sym, t_low, t_high, cfg: EngineConfig) -> Occurrences:
+    def track_batch(self, times_by_sym, t_low, t_high,
+                    cfg: EngineConfig) -> Occurrences:
         from ..kernels import ops  # deferred: core stays importable sans pallas
 
         # same policy-clamped blocks as the per-level engine; ops.track_batch
@@ -527,7 +581,8 @@ class FusedDensePallasEngine:
             overflow=truncated,
         )
 
-    def track_corpus(self, times_by_sym, t_low, t_high, cfg: EngineConfig) -> Occurrences:
+    def track_corpus(self, times_by_sym, t_low, t_high,
+                     cfg: EngineConfig) -> Occurrences:
         from ..kernels import ops  # deferred: core stays importable sans pallas
 
         # stream axis folded into the batch grid dimension (ops.track_corpus):

@@ -1,5 +1,6 @@
 from .pipeline import DataConfig, SyntheticCorpus, token_event_stream
-from .spikes import NetworkConfig, PAPER_DATASETS, embedded_episodes, paper_dataset, simulate
+from .spikes import (NetworkConfig, PAPER_DATASETS, embedded_episodes,
+                     paper_dataset, simulate)
 
 __all__ = ["DataConfig", "SyntheticCorpus", "token_event_stream",
            "NetworkConfig", "PAPER_DATASETS", "embedded_episodes",

@@ -79,7 +79,8 @@ class MeshRules:
                  shape: Sequence[int]) -> P:
         if len(logical_axes) != len(shape):
             # trailing unnamed dims replicate
-            logical_axes = tuple(logical_axes) + (None,) * (len(shape) - len(logical_axes))
+            logical_axes = (tuple(logical_axes)
+                            + (None,) * (len(shape) - len(logical_axes)))
         used: set = set()
         parts = []
         for logical, dim in zip(logical_axes, shape):

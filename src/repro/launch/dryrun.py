@@ -241,7 +241,8 @@ def main():
                 n_ok += status == "ok"
                 n_skip += status == "skipped"
                 n_err += status == "error"
-                line = f"[{status:7s}] {rep['mesh']:9s} {arch:22s} {shape_name:12s} {dt:7.1f}s"
+                line = (f"[{status:7s}] {rep['mesh']:9s} {arch:22s} "
+                        f"{shape_name:12s} {dt:7.1f}s")
                 if status == "ok":
                     r = rep["roofline"]
                     line += (f"  flops/dev={r['flops_per_device']:.3e}"

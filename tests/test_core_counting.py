@@ -56,6 +56,7 @@ def test_fsm_scan_matches(cases):
         assert int(got) == want
 
 
+@pytest.mark.slow
 def test_mapconcat_matches(cases):
     for s, ep, want in cases:
         got = count_mapconcat(s, ep, n_segments=4, ring=48,

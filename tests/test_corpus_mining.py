@@ -62,7 +62,8 @@ def _assert_corpus_matches_loop(streams, cfg, thresholds=None, ctx=()):
 
 
 @pytest.mark.parametrize("engine", ENGINES)
-@pytest.mark.parametrize("batch", (1, 2, 32))
+@pytest.mark.parametrize(
+    "batch", (1, 2, pytest.param(32, marks=pytest.mark.slow)))
 def test_mine_corpus_matches_loop(engine, batch):
     """Ragged corpus (duplicate timestamps, varied lengths): bit-for-bit
     parity with the per-stream loop."""
@@ -77,6 +78,7 @@ def test_mine_corpus_matches_loop(engine, batch):
     _assert_corpus_matches_loop(streams, cfg, ctx=(engine, batch))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("engine", ENGINES)
 def test_mine_corpus_seeded_cases(engine):
     """The shared corpus case builder: all-padding streams every third
@@ -89,6 +91,7 @@ def test_mine_corpus_seeded_cases(engine):
             streams, cfg, thresholds=thresholds, ctx=(engine, seed))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("engine", ("dense_pallas", "count_scan_write"))
 def test_mine_corpus_other_engines_match_loop(engine):
     """Engines without any corpus-native method (per-level Pallas, faithful

@@ -76,6 +76,7 @@ def test_planted_cascades_present(golden):
     assert any(p in found for p in planted)
 
 
+@pytest.mark.slow
 def test_mine_sharded_recovers_golden_8dev():
     """mine_sharded on 8 simulated devices == the stored frequent sets
     (dense + fused engines; subprocess because jax locks device count)."""

@@ -115,6 +115,7 @@ def test_index_built_once_per_stream(monkeypatch):
     assert calls["n"] == 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("engine", ["dense_pallas", "count_scan_write"])
 def test_mine_engine_agreement(engine):
     """Every registered engine drives the miner to the same result."""

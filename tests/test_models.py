@@ -53,6 +53,7 @@ def test_reduced_decode_step(arch):
     assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-0.6b", "rwkv6-3b", "recurrentgemma-2b"])
 def test_decode_matches_forward(arch):
     """Step-by-step decode must reproduce the teacher-forced forward logits."""

@@ -33,6 +33,7 @@ def _run_child(*args, devices=8, timeout=900):
     return r
 
 
+@pytest.mark.slow
 def test_halo_and_ownership_regressions_8dev():
     """Boundary-timestamp-tie ownership, the halo == span duplicate edge
     (flagged, never silent), per-episode flags in the batched path, and a
@@ -40,6 +41,7 @@ def test_halo_and_ownership_regressions_8dev():
     _run_child("halo", timeout=300)
 
 
+@pytest.mark.slow
 def test_differential_smoke_8dev():
     """A small always-on slice of the differential sweep (the full sweep
     is the slow-marked tests below)."""

@@ -1,0 +1,458 @@
+"""Streaming miner differential suite + the PR's bugfix regressions.
+
+The load-bearing property: ``StreamingMiner.append`` after any chunking of a
+stream — per-event chunks, empty chunks, all-padding chunks, duplicate
+timestamps at chunk boundaries, capacity growth mid-stream — returns
+bit-for-bit what a cold ``mine_arrays`` returns for the concatenated
+stream, for every registered engine and both schedulers. Plus unit tests
+for the pieces (incremental index, greedy chain-state carry, ``t_min`` seed
+restriction) and regressions for the ``cap=0`` falsy-default bug and the
+batch-level negative-padding remap.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import strategies
+from repro.core import (EventStream, MinerConfig, StreamingMiner,
+                        count_nonoverlapped, count_occurrences, grow_type_index,
+                        mine_arrays, mine_corpus, serial, type_index,
+                        type_index_batch, type_index_update)
+from repro.core import scheduling, tracking
+from repro.core.events import episode_symbol_times
+
+ENGINES = ("dense", "dense_pallas", "dense_pallas_fused", "count_scan_write",
+           "atomic_sort", "flags")
+
+
+def _random_chunks(rng, n):
+    """Random chunk sizes covering n events, with empty chunks mixed in."""
+    sizes = []
+    left = n
+    while left > 0:
+        sz = int(rng.integers(0, min(left, 40) + 1))
+        sizes.append(sz)
+        left -= sz
+    if not sizes:
+        sizes = [0]
+    return sizes
+
+
+def _assert_levels_equal(got, want, ctx):
+    assert set(got) == set(want), (ctx, sorted(got), sorted(want))
+    for lvl in want:
+        assert np.array_equal(got[lvl].symbols, want[lvl].symbols), (
+            ctx, lvl, got[lvl].symbols, want[lvl].symbols)
+        assert np.array_equal(got[lvl].counts, want[lvl].counts), (
+            ctx, lvl, got[lvl].counts, want[lvl].counts)
+        assert got[lvl].n_candidates == want[lvl].n_candidates, (ctx, lvl)
+
+
+def _check_streaming(seed, engine, parallel=False, n=100, n_types=3,
+                     check_prefixes=False, initial_cap=None, **cfg_kw):
+    rng = np.random.default_rng(seed)
+    s = strategies._random_stream(rng, n, n_types, max_gap=2)
+    types, times = np.asarray(s.types), np.asarray(s.times)
+    kw = dict(t_low=0.0, t_high=1.0, threshold=4, max_level=3, engine=engine,
+              parallel_schedule=parallel, cap_occ=4 * n, max_window=64)
+    kw.update(cfg_kw)
+    cfg = MinerConfig(**kw)
+    miner = StreamingMiner(n_types, cfg, initial_cap=initial_cap)
+    i = 0
+    res = None
+    for sz in _random_chunks(rng, n):
+        res = miner.append(types[i:i + sz], times[i:i + sz])
+        i += sz
+        if check_prefixes:
+            cold = mine_arrays(EventStream(types[:i], times[:i], n_types), cfg)
+            _assert_levels_equal(res, cold, (seed, engine, parallel, i))
+    assert i == n
+    cold = mine_arrays(EventStream(types, times, n_types), cfg)
+    _assert_levels_equal(res, cold, (seed, engine, parallel, "final"))
+
+
+# ---------------------------------------------------------------------------
+# incremental index
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_type_index_update_matches_cold(seed):
+    """Chunked scatters + geometric growth == one cold type_index build."""
+    rng = np.random.default_rng(seed)
+    n, n_types = int(rng.integers(1, 200)), 4
+    s = strategies._random_stream(rng, n, n_types, max_gap=1)
+    types, times = np.asarray(s.types), np.asarray(s.times)
+    cap = 4
+    table = jnp.full((n_types, cap), jnp.inf, jnp.float32)
+    counts = jnp.zeros((n_types,), jnp.int32)
+    i = 0
+    for sz in _random_chunks(rng, n):
+        chunk_ty, chunk_tm = types[i:i + sz], times[i:i + sz]
+        i += sz
+        need = int((np.asarray(counts)
+                    + np.bincount(chunk_ty, minlength=n_types)).max())
+        while need > cap:
+            cap *= 2
+            table = grow_type_index(table, cap)
+        table, counts = type_index_update(table, counts, chunk_ty, chunk_tm)
+        want_t, want_c = type_index(types[:i], times[:i], n_types, cap)
+        assert np.array_equal(np.asarray(want_c), np.asarray(counts)), (seed, i)
+        assert np.array_equal(np.asarray(want_t), np.asarray(table)), (seed, i)
+
+
+def test_type_index_update_drops_negative_padding():
+    """-1 chunk padding must not corrupt the LAST type's row (scatter wrap)."""
+    n_types = 3
+    table = jnp.full((n_types, 4), jnp.inf, jnp.float32)
+    counts = jnp.zeros((n_types,), jnp.int32)
+    table, counts = type_index_update(
+        table, counts,
+        np.array([2, -1, 2, -1], np.int32),
+        np.array([1.0, np.inf, 2.0, np.inf], np.float32))
+    assert np.array_equal(np.asarray(counts), [0, 0, 2])
+    assert np.allclose(np.asarray(table)[2, :2], [1.0, 2.0])
+    assert np.all(np.isinf(np.asarray(table)[:2]))
+
+
+def test_grow_type_index_contract():
+    table = jnp.asarray([[1.0, 2.0]], jnp.float32)
+    grown = grow_type_index(table, 4)
+    assert grown.shape == (1, 4)
+    assert np.allclose(np.asarray(grown)[0, :2], [1.0, 2.0])
+    assert np.all(np.isinf(np.asarray(grown)[0, 2:]))
+    assert grow_type_index(table, 2) is table
+    with pytest.raises(ValueError):
+        grow_type_index(table, 1)
+
+
+# ---------------------------------------------------------------------------
+# greedy chain-state carry
+# ---------------------------------------------------------------------------
+
+
+def _intervals(rng, m):
+    ends = np.sort(rng.uniform(0, 20, m)).astype(np.float32)
+    starts = (ends - rng.uniform(0.1, 3.0, m)).astype(np.float32)
+    valid = rng.random(m) < 0.85
+    return tracking.Occurrences(
+        jnp.where(jnp.asarray(valid), jnp.asarray(starts), -jnp.inf),
+        jnp.where(jnp.asarray(valid), jnp.asarray(ends), jnp.inf),
+        jnp.asarray(valid), jnp.int32(0), jnp.bool_(False))
+
+
+@pytest.mark.parametrize("parallel", (False, True))
+@pytest.mark.parametrize("seed", range(8))
+def test_greedy_state_stitch_equals_whole(seed, parallel):
+    """fold(fold(s0, prefix), suffix) == fold(s0, whole) for both schedulers,
+    and scan/binary-lifting agree on every intermediate state."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 60))
+    occ = _intervals(rng, m)
+    cut = int(rng.integers(0, m + 1))
+
+    def part(lo, hi):
+        return tracking.Occurrences(
+            occ.starts[lo:hi], occ.ends[lo:hi], occ.valid[lo:hi],
+            jnp.int32(0), jnp.bool_(False))
+
+    whole = int(scheduling.greedy_count(occ, parallel=parallel))
+    pe, pc = scheduling.greedy_state(
+        part(0, cut), -jnp.inf, jnp.int32(0), parallel=parallel)
+    pe2, pc2 = scheduling.greedy_state(part(cut, m), pe, pc, parallel=parallel)
+    assert int(pc2) == whole, (seed, parallel, cut)
+    # scan and lifting must agree on the carried state itself, not just the
+    # final count — the streaming cache stores it across appends
+    se, sc = scheduling.greedy_scan_state(part(0, cut), -jnp.inf, jnp.int32(0))
+    le, lc = scheduling.greedy_parallel_state(part(0, cut), -jnp.inf,
+                                              jnp.int32(0))
+    assert int(sc) == int(lc)
+    assert float(se) == float(le)
+
+
+def test_greedy_state_strict_tie():
+    """An interval starting exactly at the carried prev_end is NOT taken."""
+    occ = tracking.Occurrences(
+        jnp.asarray([1.0, 2.5], jnp.float32), jnp.asarray([2.0, 3.0]),
+        jnp.asarray([True, True]), jnp.int32(0), jnp.bool_(False))
+    for parallel in (False, True):
+        pe, pc = scheduling.greedy_state(
+            occ, jnp.float32(1.0), jnp.int32(5), parallel=parallel)
+        # start 1.0 == prev_end 1.0 -> skipped; start 2.5 > 1.0 -> taken
+        assert int(pc) == 6 and float(pe) == 3.0, parallel
+
+
+# ---------------------------------------------------------------------------
+# t_min seed restriction (the tail view's correctness guard)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_t_min_equals_truncated_stream(engine):
+    """count_occurrences(t_min=T) == a cold count of the suffix stream."""
+    rng = np.random.default_rng(3)
+    for seed in range(4):
+        s = strategies._random_stream(
+            np.random.default_rng(seed), 60, 3, max_gap=2)
+        ep = serial([0, 1, 0], 0.0, 1.5)
+        cut = float(np.asarray(s.times)[int(rng.integers(0, 60))])
+        table, counts = type_index(s.types, s.times, s.n_types, s.n_events)
+        sym, lo, hi = ep.as_arrays()
+        tbs, _ = episode_symbol_times(table, counts, sym)
+        got = count_occurrences(
+            tbs, lo, hi, engine=engine, cap_occ=4 * s.n_events,
+            max_window=64, t_min=cut)
+        keep = np.asarray(s.times) >= cut
+        trunc = EventStream(np.asarray(s.types)[keep],
+                            np.asarray(s.times)[keep], s.n_types)
+        want = count_nonoverlapped(trunc, ep, engine=engine,
+                                   cap_occ=4 * s.n_events, max_window=64)
+        assert int(got.count) == int(want.count), (engine, seed, cut)
+
+
+# ---------------------------------------------------------------------------
+# streaming == cold, across engines x chunkings
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_streaming_matches_cold_dense_prefixes(seed):
+    """Every prefix (not just the final stream) matches the cold miner."""
+    _check_streaming(seed, "dense", check_prefixes=True, n=90)
+
+
+@pytest.mark.parametrize("parallel", (False, True))
+def test_streaming_matches_cold_dense_schedulers(parallel):
+    _check_streaming(11, "dense", parallel=parallel, n=120)
+
+
+@pytest.mark.parametrize("engine", ("dense", "count_scan_write"))
+def test_streaming_matches_cold_fast_engines(engine):
+    for seed in range(3):
+        _check_streaming(seed + 20, engine, n=80)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("parallel", (False, True))
+def test_streaming_matches_cold_all_engines(engine, parallel):
+    for seed in range(3):
+        _check_streaming(seed + 40, engine, parallel=parallel, n=110,
+                         check_prefixes=(engine == "dense"))
+
+
+def test_streaming_per_event_chunks_and_duplicates():
+    """Worst-case chunking: one event per append on a duplicate-heavy
+    stream (zero gaps with p=1/2 -> boundary ties at almost every append)."""
+    rng = np.random.default_rng(5)
+    n, n_types = 40, 2
+    s = strategies._random_stream(rng, n, n_types, max_gap=1)
+    types, times = np.asarray(s.types), np.asarray(s.times)
+    cfg = MinerConfig(t_low=0.0, t_high=1.0, threshold=2, max_level=3)
+    miner = StreamingMiner(n_types, cfg)
+    for i in range(n):
+        res = miner.append(types[i:i + 1], times[i:i + 1])
+        cold = mine_arrays(EventStream(types[:i + 1], times[:i + 1], n_types),
+                           cfg)
+        _assert_levels_equal(res, cold, i)
+
+
+def test_streaming_duplicate_timestamps_at_boundary():
+    """The chunk's first events share their timestamp with the old stream's
+    last — the old occurrence is cached history, the new one is delta."""
+    ty = np.array([0, 1, 0, 1, 0, 1, 0, 1], np.int32)
+    tm = np.array([0, 0, 0, 0.5, 0.5, 0.5, 0.5, 1.0], np.float32)
+    cfg = MinerConfig(t_low=0.0, t_high=1.0, threshold=1, max_level=2)
+    miner = StreamingMiner(2, cfg)
+    miner.append(ty[:4], tm[:4])
+    res = miner.append(ty[4:], tm[4:])
+    cold = mine_arrays(EventStream(ty, tm, 2), cfg)
+    _assert_levels_equal(res, cold, "dup-boundary")
+
+
+def test_streaming_all_padding_and_empty_chunks():
+    """-1/+inf padding chunks are dropped; results stay the last real ones."""
+    cfg = MinerConfig(t_low=0.0, t_high=1.0, threshold=1, max_level=2)
+    miner = StreamingMiner(2, cfg)
+    # empty + all-padding before ANY real event: the empty-stream result
+    empty = miner.append(np.array([-1, -1], np.int32),
+                         np.array([np.inf, np.inf], np.float32))
+    assert set(empty) == {1} and empty[1].symbols.shape[0] == 0
+    miner.append(np.array([0, 1], np.int32), np.array([0.0, 0.5], np.float32))
+    res1 = dict(miner.results)
+    res2 = miner.append(np.zeros((0,), np.int32), np.zeros((0,), np.float32))
+    _assert_levels_equal(res2, res1, "empty chunk")
+    # padding mixed INTO a real chunk is stripped before indexing
+    res3 = miner.append(np.array([-1, 1, -1], np.int32),
+                        np.array([np.inf, 1.0, np.inf], np.float32))
+    cold = mine_arrays(
+        EventStream(np.array([0, 1, 1], np.int32),
+                    np.array([0.0, 0.5, 1.0], np.float32), 2), cfg)
+    _assert_levels_equal(res3, cold, "padding in chunk")
+
+
+def test_streaming_capacity_growth_mid_stream():
+    """initial_cap=2 forces repeated geometric growth; results unaffected."""
+    _check_streaming(31, "dense", n=120, check_prefixes=True, initial_cap=2)
+
+
+def test_streaming_large_magnitude_times():
+    """The suffix-cutoff slack must be absolute at the STREAM's magnitude:
+    at t ~ 1.6e5 a float32 ulp is ~0.016, far larger than any relative
+    slack at t0's own magnitude — a too-tight cutoff silently drops seeds."""
+    rng = np.random.default_rng(7)
+    base = np.float32(1.6e5)
+    gaps = rng.integers(0, 3, 160).astype(np.float32) * 0.25
+    times = (base + np.cumsum(gaps)).astype(np.float32)
+    types = rng.integers(0, 3, 160).astype(np.int32)
+    cfg = MinerConfig(t_low=0.0, t_high=2.0, threshold=4, max_level=3)
+    miner = StreamingMiner(3, cfg)
+    i = 0
+    for sz in (40, 40, 40, 40):
+        res = miner.append(types[i:i + sz], times[i:i + sz])
+        i += sz
+        cold = mine_arrays(EventStream(types[:i], times[:i], 3), cfg)
+        _assert_levels_equal(res, cold, ("large-magnitude", i))
+
+
+def test_streaming_cache_stays_bounded():
+    """Chain states not advanced through the latest append are evicted, so
+    the cache tracks the LIVE candidate sets, not every candidate ever."""
+    rng = np.random.default_rng(13)
+    s = strategies._random_stream(rng, 120, 3, max_gap=2)
+    types, times = np.asarray(s.types), np.asarray(s.times)
+    cfg = MinerConfig(t_low=0.0, t_high=1.0, threshold=4, max_level=3)
+    miner = StreamingMiner(3, cfg)
+    i = 0
+    for sz in (30, 30, 30, 30):
+        miner.append(types[i:i + sz], times[i:i + sz])
+        i += sz
+        for level, cache in miner._cache.items():
+            assert all(st.seq == miner.seq for st in cache.values()), level
+
+
+def test_streaming_newly_frequent_triggers_backfill():
+    """A type crosses threshold late -> its episodes backfill over the whole
+    history (count includes occurrences from before it became frequent)."""
+    # type 1 appears once early (infrequent), then floods in chunk 2; the
+    # pair 0->1 from the early events must be included in the final count
+    ty1 = np.array([0, 1, 0, 0, 0], np.int32)
+    tm1 = np.array([0.0, 0.5, 1.0, 2.0, 3.0], np.float32)
+    ty2 = np.array([1, 0, 1, 0, 1], np.int32)
+    tm2 = np.array([3.5, 4.0, 4.5, 5.0, 5.5], np.float32)
+    cfg = MinerConfig(t_low=0.0, t_high=1.0, threshold=3, max_level=2)
+    miner = StreamingMiner(2, cfg)
+    r1 = miner.append(ty1, tm1)
+    assert 2 not in r1 or not any(
+        (row == [0, 1]).all() for row in r1[2].symbols)
+    r2 = miner.append(ty2, tm2)
+    cold = mine_arrays(
+        EventStream(np.concatenate([ty1, ty2]), np.concatenate([tm1, tm2]), 2),
+        cfg)
+    _assert_levels_equal(r2, cold, "late-frequent backfill")
+
+
+def test_streaming_rejections():
+    cfg = MinerConfig(t_low=0.0, t_high=1.0, threshold=1)
+    miner = StreamingMiner(2, cfg)
+    miner.append([0, 1], [0.0, 1.0])
+    with pytest.raises(ValueError, match="time-sorted"):
+        miner.append([0], [0.5])                       # before last append
+    with pytest.raises(ValueError, match="time-sorted"):
+        miner.append([0, 1], [3.0, 2.0])               # unsorted chunk
+    with pytest.raises(ValueError, match="out of range"):
+        miner.append([2], [4.0])
+    with pytest.raises(ValueError, match="growth"):
+        StreamingMiner(2, cfg, growth=1.0)
+    import jax
+    from jax.sharding import Mesh
+    mesh_cfg = dataclasses.replace(
+        cfg, mesh=Mesh(np.array(jax.devices()[:1]), ("data",)))
+    with pytest.raises(ValueError, match="single-device"):
+        StreamingMiner(2, mesh_cfg)
+
+
+@pytest.mark.slow
+def test_streaming_seeded_sweep():
+    """Wider seeded sweep (the adversarial stream generators of
+    tests/strategies.py: zero-gap duplicates, ragged chunks)."""
+    for seed in range(12):
+        _check_streaming(seed + 100, "dense", n=140, check_prefixes=True)
+
+
+# ---------------------------------------------------------------------------
+# regression: explicit cap=0 / falsy knobs are honored, not "unset"
+# ---------------------------------------------------------------------------
+
+
+def _tiny_stream():
+    return EventStream(np.array([0, 1, 0], np.int32),
+                       np.array([0.0, 0.5, 1.0], np.float32), 2)
+
+
+def test_cap_zero_is_not_unset():
+    """cap=0 used to silently mean cap=n_events; now it is rejected."""
+    ep = serial([0, 1], 0.0, 1.0)
+    with pytest.raises(ValueError, match="cap"):
+        count_nonoverlapped(_tiny_stream(), ep, cap=0)
+    with pytest.raises(ValueError, match="cap"):
+        mine_arrays(_tiny_stream(),
+                    MinerConfig(t_low=0.0, t_high=1.0, threshold=1, cap=0))
+    with pytest.raises(ValueError, match="cap"):
+        mine_corpus([_tiny_stream()],
+                    MinerConfig(t_low=0.0, t_high=1.0, threshold=1, cap=0))
+
+
+def test_cap_one_is_honored_with_overflow():
+    """A tiny explicit cap must clip (and flag), not widen to n_events."""
+    ep = serial([0, 1], 0.0, 1.0)
+    res = count_nonoverlapped(_tiny_stream(), ep, cap=1)
+    assert bool(res.overflow)        # type 0 has 2 events > cap
+    full = count_nonoverlapped(_tiny_stream(), ep)
+    assert not bool(full.overflow)
+
+
+def test_cap_occ_zero_is_not_unset():
+    """cap_occ=0 used to silently widen to cap for the faithful engines."""
+    ep = serial([0, 1], 0.0, 1.0)
+    table, counts = type_index(_tiny_stream().types, _tiny_stream().times,
+                               2, 3)
+    sym, lo, hi = ep.as_arrays()
+    tbs, _ = episode_symbol_times(table, counts, sym)
+    with pytest.raises(ValueError, match="cap_occ"):
+        count_occurrences(tbs, lo, hi, engine="count_scan_write", cap_occ=0)
+
+
+# ---------------------------------------------------------------------------
+# regression: batch-level negative-padding remap (PR 3's fix, corpus surface)
+# ---------------------------------------------------------------------------
+
+
+def test_type_index_batch_negative_padding_remap():
+    """The vmapped corpus index must drop -1 padding exactly like the
+    single-stream path: a raw -1 would wrap into the LAST type's row,
+    inflating its count and racing +inf writes into its table."""
+    n_types, cap = 3, 4
+    types = np.array([[0, 2, -1, -1],        # padded tail
+                      [-1, -1, -1, -1],      # all-padding stream
+                      [2, 2, 2, -1]], np.int32)
+    times = np.array([[0.0, 1.0, np.inf, np.inf],
+                      [np.inf] * 4,
+                      [0.5, 0.5, 2.0, np.inf]], np.float32)
+    tables, counts = type_index_batch(types, times, n_types, cap)
+    tables, counts = np.asarray(tables), np.asarray(counts)
+    # last type's counts are exact — padding contributed nothing
+    assert np.array_equal(counts, [[1, 0, 1], [0, 0, 0], [0, 0, 3]])
+    # and its rows hold only real times (no +inf raced into a live slot)
+    assert np.allclose(tables[0, 2, :1], [1.0])
+    assert np.all(np.isinf(tables[1]))
+    assert np.allclose(tables[2, 2, :3], [0.5, 0.5, 2.0])
+    # row-for-row identical to the single-stream index of the real events
+    for s in range(3):
+        keep = types[s] >= 0
+        want_t, want_c = type_index(types[s][keep], times[s][keep],
+                                    n_types, cap)
+        assert np.array_equal(np.asarray(want_t), tables[s]), s
+        assert np.array_equal(np.asarray(want_c), counts[s]), s
