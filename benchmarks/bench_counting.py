@@ -47,7 +47,10 @@ SWEEP_EPISODE_LENGTHS = (3, 4, 5)
 SWEEP_STREAM_SIZES = (1024, 4096)
 SWEEP_BATCHES = (8, 32)
 CSW_MAX_BATCH = 8     # count_scan_write is seconds/call at 4096; cap its sweep
-SCHEDULER_ENGINE = "dense"   # scheduler head-to-head rides the fastest engine
+# scheduler head-to-head: the host-greedy reference engine AND the fused
+# single-launch engine, so every (cell, scheduler) pair has a fused entry
+# for the --compare fused-min-time gate
+SCHEDULER_ENGINES = ("dense", "dense_pallas_fused")
 JSON_PATH = pathlib.Path("BENCH_counting.json")
 SMOKE_JSON_PATH = pathlib.Path("BENCH_counting.smoke.json")
 
@@ -68,7 +71,8 @@ def run_engine_sweep(json_path: pathlib.Path | None = None) -> list:
 
     Every entry carries a ``scheduler`` key ("scan" = paper Algorithm 1 as
     lax.scan, "parallel" = greedy_parallel binary lifting); the scheduler
-    head-to-head runs both on SCHEDULER_ENGINE, everything else on "scan".
+    head-to-head runs both on every SCHEDULER_ENGINES entry, everything
+    else on "scan".
 
     ``json_path`` overrides the output file — the --compare gate passes a
     sidecar so it never clobbers the checked-in baseline it gates against.
@@ -91,7 +95,7 @@ def run_engine_sweep(json_path: pathlib.Path | None = None) -> list:
                 runs = [(engine, False) for engine in SWEEP_ENGINES
                         if not (engine == "count_scan_write"
                                 and batch > CSW_MAX_BATCH)]
-                runs.append((SCHEDULER_ENGINE, True))
+                runs.extend((engine, True) for engine in SCHEDULER_ENGINES)
                 for engine, par in runs:
                     kw = dict(n_types=n_types, cap=n_events, engine=engine,
                               parallel_schedule=par)

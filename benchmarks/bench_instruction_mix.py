@@ -6,29 +6,132 @@ instruction mix of the compiled module (analysis/hlo_costs.py), which
 exposes the same story the paper tells: MapConcat's complex stitch logic
 executes an order of magnitude more instructions than the redesigned
 scan-based pipeline.
+
+``single_launch_deltas`` is the asserted cell behind ISSUE 6's fused-count
+claim: because the container runs Pallas in interpret mode on CPU, the
+wall-clock sweep alone cannot prove a hardware win, so the single-launch
+pipeline must ALSO beat the old track-then-schedule pipeline on the
+instruction-mix/roofline axes — HBM bytes of the lowered module and device
+dispatches (kernel launches + grid steps) per mining level both strictly
+drop. The deltas are emitted, asserted, and persisted to
+``BENCH_instruction_mix.json`` (smoke: a ``.smoke`` sidecar).
 """
 from __future__ import annotations
 
+import json
+import os
+import pathlib
+
 import jax
+import numpy as np
 
 from repro.analysis.hlo_costs import module_costs
-from repro.core import count_batch, count_mapconcat
+from repro.core import count_batch, count_mapconcat, serial
 from repro.core.episodes import episode_batch
 from repro.data.spikes import NetworkConfig, embedded_episodes, paper_dataset
+from repro.kernels import autotune
 
 from .common import emit
 
+JSON_PATH = pathlib.Path("BENCH_instruction_mix.json")
+SMOKE_JSON_PATH = pathlib.Path("BENCH_instruction_mix.smoke.json")
+
+
+def _lower_costs(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return module_costs(compiled.as_text())
+
+
+def single_launch_deltas(n_events: int = 512, ep_len: int = 4,
+                         batch: int = 8):
+    """Old (track kernel + host greedy) vs new (single-launch) count path.
+
+    Both pipelines are lowered on one identical indexed counting cell and
+    costed from optimized HLO. Returns the report dict; ``run`` asserts the
+    strict drops. ``launches`` counts device program regions per mining
+    level: the old path dispatches the tracking kernel AND the host-side
+    compaction + greedy-scan epilogue, the fused path dispatches once;
+    ``grid_steps`` is the per-launch grid from the resolved tile configs
+    (the roofline model's launch-overhead axis).
+    """
+    rng = np.random.default_rng(0)
+    times = np.cumsum(rng.exponential(0.5, n_events)).astype(np.float32)
+    types = rng.integers(0, 8, n_events).astype(np.int32)
+    eps = [serial(rng.integers(0, 8, ep_len).tolist(), 0.1, 2.0)
+           for _ in range(batch)]
+    sym, lo, hi = episode_batch(eps)
+    levels = ep_len - 1
+
+    def costs_for(engine):
+        return _lower_costs(
+            lambda ty, tm: count_batch(ty, tm, sym, lo, hi, n_types=8,
+                                       cap=n_events, engine=engine),
+            types, times)
+
+    c_old = costs_for("dense_pallas")          # track launch + host greedy
+    c_new = costs_for("dense_pallas_fused")    # ONE launch, VMEM-resident
+
+    cfg_t = autotune.resolve("track", levels, n_events, batch)
+    cfg_c = autotune.resolve("count", levels, n_events, batch)
+    steps_old = autotune.model_cost(
+        "track", levels, n_events, batch, cfg_t)["grid_steps"]
+    steps_new = autotune.model_cost(
+        "count", levels, n_events, batch, cfg_c)["grid_steps"]
+    return {
+        "cell": {"n_events": n_events, "episode_len": ep_len,
+                 "batch": batch, "levels": levels},
+        "old": {"pipeline": "dense_pallas + host greedy",
+                "hbm_bytes": c_old["hbm_bytes"],
+                "instructions": sum(c_old["op_mix"].values()),
+                "launches_per_level": 2, "grid_steps": steps_old},
+        "new": {"pipeline": "dense_pallas_fused single launch",
+                "hbm_bytes": c_new["hbm_bytes"],
+                "instructions": sum(c_new["op_mix"].values()),
+                "launches_per_level": 1, "grid_steps": steps_new},
+    }
+
+
+def run_single_launch_cell() -> dict:
+    """Emit + assert the fused-pipeline deltas, persist the JSON report."""
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    report = single_launch_deltas(
+        n_events=256 if smoke else 512, ep_len=3 if smoke else 4,
+        batch=4 if smoke else 8)
+    old, new = report["old"], report["new"]
+    for tag, c in (("old_trackpipe", old), ("new_singlelaunch", new)):
+        emit(f"fused_count_{tag}", c["instructions"],
+             f"hbm={c['hbm_bytes']:.3e};launches={c['launches_per_level']};"
+             f"grid_steps={c['grid_steps']:.0f}")
+    checks = {
+        "hbm_bytes_drop": new["hbm_bytes"] < old["hbm_bytes"],
+        "launches_drop": new["launches_per_level"] < old["launches_per_level"],
+        "grid_steps_drop": new["grid_steps"] < old["grid_steps"],
+    }
+    report["checks"] = checks
+    path = SMOKE_JSON_PATH if smoke else JSON_PATH
+    path.write_text(json.dumps(
+        {"backend": jax.default_backend(),
+         "suite": "single_launch_instruction_mix", **report},
+        indent=2) + "\n")
+    emit("fused_count_json_written", 0.0, str(path))
+    failed = [k for k, ok in checks.items() if not ok]
+    assert not failed, (
+        f"single-launch pipeline does not dominate the old track pipeline "
+        f"on {failed}: old={old} new={new}")
+    return report
+
 
 def run() -> None:
+    run_single_launch_cell()
+    if os.environ.get("REPRO_BENCH_SMOKE"):
+        return
     stream = paper_dataset(2, scale=0.005)
     n = stream.n_events
     cap = int(n)
     ep = embedded_episodes(NetworkConfig())[0].subepisode(0, 4)
     sym, lo, hi = episode_batch([ep])
 
-    def lower_costs(fn, *args):
-        compiled = jax.jit(fn).lower(*args).compile()
-        return module_costs(compiled.as_text())
+    lower_costs = _lower_costs
 
     c_csw = lower_costs(
         lambda ty, tm: count_batch(ty, tm, sym, lo, hi, n_types=stream.n_types,

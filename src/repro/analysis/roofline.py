@@ -12,6 +12,14 @@ against per-chip peaks; *_total in the report = per_device * chips.
 collective_bytes is not in cost_analysis: we parse the optimized HLO and
 sum operand bytes of every all-gather / all-reduce / reduce-scatter /
 all-to-all / collective-permute (sync and async -start forms).
+
+This model is LOAD-BEARING for the hot path, not just reporting:
+``kernels.autotune.model_time`` routes its analytic per-launch cost dicts
+through :func:`analyze` to pre-rank tile candidates, and the winners land
+in ``kernels/tuned_configs.json`` — the table every counting entry point
+resolves ``None`` block knobs against (``benchmarks/run.py --autotune``
+regenerates it). Changing the peaks or the t_compute/t_memory terms here
+reshapes the candidate ranking, so recheck the tuned table after edits.
 """
 from __future__ import annotations
 

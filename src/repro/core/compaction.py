@@ -46,12 +46,17 @@ def compact(
 
     Returns (new_times f32[cap_occ], new_carried f32[cap_occ],
              n_out i32, overflow bool).
+
+    ``method`` must name an entry of :data:`METHODS`; anything else raises
+    ``ValueError`` naming the registered methods.
     """
-    if method == "count_scan_write":
-        return _count_scan_write(t_sym, wlo, counts, carried, cap_occ, max_window)
-    if method == "flags":
-        return _flags(t_sym, wlo, counts, carried, cap_occ, max_window)
-    raise ValueError(f"unknown compaction method: {method}")
+    try:
+        impl = METHODS[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown compaction method: {method!r}; "
+            f"registered methods: {sorted(METHODS)}") from None
+    return impl(t_sym, wlo, counts, carried, cap_occ, max_window)
 
 
 def _gather_windows(t_sym, wlo, counts, max_window):
@@ -96,3 +101,10 @@ def _flags(t_sym, wlo, counts, carried, cap_occ, max_window):
     new_t = new_t.at[pos].set(flat_vals, mode="drop")
     new_c = new_c.at[pos].set(flat_carried, mode="drop")
     return new_t, new_c, jnp.minimum(total, cap_occ).astype(jnp.int32), overflow
+
+
+#: Registered compaction strategies — the validated `method` names.
+METHODS = {
+    "count_scan_write": _count_scan_write,
+    "flags": _flags,
+}

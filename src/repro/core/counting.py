@@ -26,7 +26,18 @@ All engines return identical counts (property-tested against the numpy FSM
 oracle) and differ only in cost profile, mirroring the paper's Fig 11/12
 method comparison. Kernel tiling knobs (``block_next``, ``block_prev``,
 ``window_tiles``, ``interpret``) thread from every public entry point down
-to the engine; non-Pallas engines ignore them.
+to the engine; non-Pallas engines ignore them. Block knobs default to
+``None`` = resolve through ``kernels.autotune`` (per-(L, N, B)-bucket tuned
+tiles from ``kernels/tuned_configs.json``, legacy constants when no entry
+exists); explicit integers bypass the table entirely.
+
+Counting itself dispatches through :func:`count_batch_dispatch`: engines
+exposing the natively-counting ``count_batch`` protocol method (the fused
+Pallas engine) run tracking + count_scan_write compaction + the greedy
+scheduler in ONE kernel launch per (level, candidate batch) — occurrence
+intervals never round-trip through HBM; every other engine takes the
+track-then-host-greedy path. Both produce bit-for-bit identical counts and
+carried chain state.
 """
 from __future__ import annotations
 
@@ -65,9 +76,9 @@ def count_occurrences(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
-    block_next: int = 256,
-    block_prev: int = 256,
-    window_tiles: int = 0,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
     t_min=None,
 ) -> CountResult:
@@ -78,14 +89,18 @@ def count_occurrences(
     at/after the cutoff, for every engine (see EngineConfig.t_min).
     """
     eng = tracking.get_engine(engine)
+    n, cap = times_by_sym.shape[-2], times_by_sym.shape[-1]
+    bn, bp, wt, chunk = _resolve_tiles(
+        eng, n - 1, cap, 1, block_next, block_prev, window_tiles)
     cfg = tracking.EngineConfig(
-        cap_occ=cap_occ, max_window=max_window, block_next=block_next,
-        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret,
+        cap_occ=cap_occ, max_window=max_window, block_next=bn,
+        block_prev=bp, window_tiles=wt, chunk=chunk, interpret=interpret,
         t_min=t_min)
-    times_by_sym, cfg = tracking.consume_seed_restriction(times_by_sym, cfg)
-    occ = eng.track(times_by_sym, t_low, t_high, cfg)
-    count = scheduling.greedy_count(occ, parallel=parallel_schedule)
-    return CountResult(count=count, n_superset=occ.n_superset, overflow=occ.overflow)
+    count, _, n_superset, overflow = count_batch_dispatch(
+        eng, times_by_sym[None], t_low[None], t_high[None],
+        *_fresh_carries(1), cfg, parallel_schedule=parallel_schedule)
+    return CountResult(
+        count=count[0], n_superset=n_superset[0], overflow=overflow[0])
 
 
 def count_nonoverlapped(
@@ -97,9 +112,9 @@ def count_nonoverlapped(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
-    block_next: int = 256,
-    block_prev: int = 256,
-    window_tiles: int = 0,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> CountResult:
     """End-to-end count for one episode on one stream (public API)."""
@@ -118,6 +133,81 @@ def count_nonoverlapped(
         window_tiles=window_tiles, interpret=interpret)
     per_type_overflow = jnp.any(counts > cap)
     return CountResult(res.count, res.n_superset, res.overflow | per_type_overflow)
+
+
+def _resolve_tiles(eng, levels: int, cap: int, batch: int,
+                   block_next, block_prev, window_tiles):
+    """(block_next, block_prev, window_tiles, chunk) for one count/track call.
+
+    ``None`` knobs resolve through the autotune bucket table — kind
+    ``"count"`` when the engine counts natively (the single-launch pipeline
+    has its own tuned shapes), ``"track"`` otherwise; explicit integers win
+    field-by-field. Resolution is trace-time only (shapes are static under
+    jit), so the hot path pays a dict lookup, nothing more.
+    """
+    kind = "count" if getattr(eng, "count_batch", None) is not None else "track"
+    try:
+        from ..kernels import autotune  # deferred: core importable sans pallas
+    except ImportError:
+        return (256 if block_next is None else block_next,
+                256 if block_prev is None else block_prev,
+                0 if window_tiles is None else window_tiles, 8)
+    cfg = autotune.resolve(
+        kind, levels, cap, batch, block_next=block_next,
+        block_prev=block_prev, window_tiles=window_tiles)
+    return cfg.block_next, cfg.block_prev, cfg.window_tiles, cfg.chunk
+
+
+def count_batch_dispatch(
+    engine,                    # str name or TrackingEngine
+    times_by_sym: jax.Array,   # f32[..., N, cap] sorted rows, +inf padded
+    t_low: jax.Array,          # f32[..., N-1]
+    t_high: jax.Array,         # f32[..., N-1]
+    prev_end: jax.Array,       # f32[...] greedy carry in
+    prev_count: jax.Array,     # i32[...] count carry in
+    cfg: tracking.EngineConfig,
+    *,
+    parallel_schedule: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batched counting through any engine — THE one counting dispatch.
+
+    Engines exposing the native ``count_batch`` protocol method (see
+    tracking.TrackingEngine) run the whole pipeline — tracking, compaction,
+    greedy scheduling — in one kernel launch; everything else tracks via
+    :func:`tracking.track_batch_dispatch` and folds the host-side greedy.
+    ``cfg.t_min`` is consumed HERE (seed-row restriction), so no engine can
+    double-apply it. The two schedulers are bit-identical including carried
+    state (property-tested), so the in-kernel fold serves both
+    ``parallel_schedule`` settings.
+
+    Returns ``(counts i32[...], end_out f32[...], n_superset i32[...],
+    overflow bool[...])`` with the ``(prev_end, prev_count)`` carry folded
+    in. Stacked leading dims (a corpus) are folded into one batch axis and
+    unfolded on the way out.
+    """
+    lead = times_by_sym.shape[:-2]
+    if len(lead) > 1:
+        import math as _math
+        rows = _math.prod(lead)
+        counts, end_out, nsup, ovf = count_batch_dispatch(
+            engine, times_by_sym.reshape((rows,) + times_by_sym.shape[-2:]),
+            t_low.reshape((rows,) + t_low.shape[-1:]),
+            t_high.reshape((rows,) + t_high.shape[-1:]),
+            jnp.reshape(prev_end, rows), jnp.reshape(prev_count, rows),
+            cfg, parallel_schedule=parallel_schedule)
+        return (counts.reshape(lead), end_out.reshape(lead),
+                nsup.reshape(lead), ovf.reshape(lead))
+    eng = tracking.get_engine(engine) if isinstance(engine, str) else engine
+    times_by_sym, cfg = tracking.consume_seed_restriction(times_by_sym, cfg)
+    count_batch = getattr(eng, "count_batch", None)
+    if count_batch is not None:
+        return count_batch(times_by_sym, t_low, t_high,
+                           jnp.asarray(prev_end, jnp.float32),
+                           jnp.asarray(prev_count, jnp.int32), cfg)
+    occ = tracking.track_batch_dispatch(eng, times_by_sym, t_low, t_high, cfg)
+    end_out, count_out = _greedy_batch_state(
+        occ, prev_end, prev_count, parallel_schedule=parallel_schedule)
+    return count_out, end_out, occ.n_superset, occ.overflow
 
 
 def _greedy_batch_state(occ, prev_end, prev_count, parallel_schedule):
@@ -159,9 +249,9 @@ def count_batch_indexed(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
-    block_next: int = 256,
-    block_prev: int = 256,
-    window_tiles: int = 0,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Count a batch of same-length episodes on a *pre-built* type index.
@@ -170,22 +260,26 @@ def count_batch_indexed(
     level — the paper's pre-processing amortization extended across the
     whole level-wise search. Returns (counts[B], n_superset[B], overflow[B]).
 
-    Batched tracking goes through :func:`tracking.track_batch_dispatch`:
-    engines exposing the natively-batched ``track_batch`` protocol method
-    (see tracking.TrackingEngine) receive the whole batch in one call — one
-    fused kernel launch per mining level instead of ``B x (N-1)`` vmapped
-    per-level launches; everything else takes the vmapped path.
+    Counting goes through :func:`count_batch_dispatch`: engines exposing the
+    natively-counting ``count_batch`` protocol method run tracking +
+    compaction + greedy scheduling in ONE kernel launch per (level, batch);
+    engines with only ``track_batch`` get one fused tracking launch plus the
+    host-side greedy fold; everything else takes the vmapped path.
     """
     cap = table.shape[1]
     index_overflow = jnp.any(counts > cap)
+    eng = tracking.get_engine(engine)
+    bn, bp, wt, chunk = _resolve_tiles(
+        eng, symbols.shape[1] - 1, cap, symbols.shape[0],
+        block_next, block_prev, window_tiles)
     cfg = tracking.EngineConfig(
-        cap_occ=cap_occ, max_window=max_window, block_next=block_next,
-        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)
-    occ = tracking.track_batch_dispatch(engine, table[symbols], t_low, t_high, cfg)
-    _, batch_counts = _greedy_batch_state(
-        occ, *_fresh_carries(symbols.shape[0]),
+        cap_occ=cap_occ, max_window=max_window, block_next=bn,
+        block_prev=bp, window_tiles=wt, chunk=chunk, interpret=interpret)
+    batch_counts, _, n_superset, overflow = count_batch_dispatch(
+        eng, table[symbols], t_low, t_high,
+        *_fresh_carries(symbols.shape[0]), cfg,
         parallel_schedule=parallel_schedule)
-    return batch_counts, occ.n_superset, occ.overflow | index_overflow
+    return batch_counts, n_superset, overflow | index_overflow
 
 
 @functools.partial(
@@ -206,9 +300,9 @@ def count_batch_indexed_stateful(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
-    block_next: int = 256,
-    block_prev: int = 256,
-    window_tiles: int = 0,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """:func:`count_batch_indexed` that threads the greedy chain state.
@@ -224,13 +318,17 @@ def count_batch_indexed_stateful(
     """
     cap = table.shape[1]
     index_overflow = jnp.any(counts > cap)
+    eng = tracking.get_engine(engine)
+    bn, bp, wt, chunk = _resolve_tiles(
+        eng, symbols.shape[1] - 1, cap, symbols.shape[0],
+        block_next, block_prev, window_tiles)
     cfg = tracking.EngineConfig(
-        cap_occ=cap_occ, max_window=max_window, block_next=block_next,
-        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)
-    occ = tracking.track_batch_dispatch(engine, table[symbols], t_low, t_high, cfg)
-    end_out, count_out = _greedy_batch_state(
-        occ, prev_end, prev_count, parallel_schedule=parallel_schedule)
-    return count_out, end_out, occ.n_superset, occ.overflow | index_overflow
+        cap_occ=cap_occ, max_window=max_window, block_next=bn,
+        block_prev=bp, window_tiles=wt, chunk=chunk, interpret=interpret)
+    count_out, end_out, n_superset, overflow = count_batch_dispatch(
+        eng, table[symbols], t_low, t_high, prev_end, prev_count, cfg,
+        parallel_schedule=parallel_schedule)
+    return count_out, end_out, n_superset, overflow | index_overflow
 
 
 @functools.partial(
@@ -255,9 +353,9 @@ def count_tail_batch_indexed(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
-    block_next: int = 256,
-    block_prev: int = 256,
-    window_tiles: int = 0,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Tail-delta recount: only what one appended chunk can change.
@@ -295,15 +393,19 @@ def count_tail_batch_indexed(
     view = jnp.where(idx < cap, view, jnp.inf)         # [B, N, tail_cap]
 
     index_overflow = jnp.any(counts > cap)
+    eng = tracking.get_engine(engine)
+    bn, bp, wt, chunk = _resolve_tiles(
+        eng, symbols.shape[1] - 1, tail_cap, symbols.shape[0],
+        block_next, block_prev, window_tiles)
     cfg = tracking.EngineConfig(
-        cap_occ=cap_occ, max_window=max_window, block_next=block_next,
-        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret,
+        cap_occ=cap_occ, max_window=max_window, block_next=bn,
+        block_prev=bp, window_tiles=wt, chunk=chunk, interpret=interpret,
         t_min=t_tail_start)
-    occ = tracking.track_batch_dispatch(engine, view, t_low, t_high, cfg)
-    end_out, count_out = _greedy_batch_state(
-        occ, prev_end, prev_count, parallel_schedule=parallel_schedule)
-    return (count_out, end_out, occ.n_superset,
-            occ.overflow | index_overflow, tail_short)
+    count_out, end_out, n_superset, overflow = count_batch_dispatch(
+        eng, view, t_low, t_high, prev_end, prev_count, cfg,
+        parallel_schedule=parallel_schedule)
+    return (count_out, end_out, n_superset,
+            overflow | index_overflow, tail_short)
 
 
 @functools.partial(
@@ -323,9 +425,9 @@ def count_corpus_indexed(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
-    block_next: int = 256,
-    block_prev: int = 256,
-    window_tiles: int = 0,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Count one candidate batch against a whole corpus of streams at once.
@@ -345,22 +447,40 @@ def count_corpus_indexed(
     composition cannot perturb them (differentially tested).
     """
     cap = tables.shape[2]
+    s, b = tables.shape[0], symbols.shape[0]
     index_overflow = jnp.any(counts > cap, axis=-1)         # [S]
+    eng = tracking.get_engine(engine)
+    bn, bp, wt, chunk = _resolve_tiles(
+        eng, symbols.shape[1] - 1, cap, s * b,
+        block_next, block_prev, window_tiles)
     cfg = tracking.EngineConfig(
-        cap_occ=cap_occ, max_window=max_window, block_next=block_next,
-        block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)
-    occ = tracking.track_corpus_dispatch(
-        engine, tables[:, symbols], t_low, t_high, cfg)
+        cap_occ=cap_occ, max_window=max_window, block_next=bn,
+        block_prev=bp, window_tiles=wt, chunk=chunk, interpret=interpret)
+    if getattr(eng, "count_batch", None) is not None:
+        # corpus-native counting: (stream, episode) rows fold into ONE
+        # single-launch count pipeline call — fresh carries, stateless
+        corpus_counts, _, n_superset, overflow = count_batch_dispatch(
+            eng, tables[:, symbols],
+            jnp.broadcast_to(t_low[None], (s,) + t_low.shape),
+            jnp.broadcast_to(t_high[None], (s,) + t_high.shape),
+            jnp.full((s, b), -jnp.inf, jnp.float32),
+            jnp.zeros((s, b), jnp.int32), cfg,
+            parallel_schedule=parallel_schedule)
+    else:
+        occ = tracking.track_corpus_dispatch(
+            eng, tables[:, symbols], t_low, t_high, cfg)
 
-    def schedule(starts, ends, valid):
-        one = tracking.Occurrences(
-            starts, ends, valid, jnp.int32(0), jnp.bool_(False))
-        return scheduling.greedy_count(one, parallel=parallel_schedule)
+        def schedule(starts, ends, valid):
+            one = tracking.Occurrences(
+                starts, ends, valid, jnp.int32(0), jnp.bool_(False))
+            return scheduling.greedy_count(one, parallel=parallel_schedule)
 
-    corpus_counts = jax.vmap(jax.vmap(schedule))(occ.starts, occ.ends, occ.valid)
+        corpus_counts = jax.vmap(jax.vmap(schedule))(
+            occ.starts, occ.ends, occ.valid)
+        n_superset, overflow = occ.n_superset, occ.overflow
     keep = corpus_counts >= thresholds.astype(jnp.int32)[:, None]
-    return (corpus_counts, keep, occ.n_superset,
-            occ.overflow | index_overflow[:, None])
+    return (corpus_counts, keep, n_superset,
+            overflow | index_overflow[:, None])
 
 
 @functools.partial(
@@ -382,9 +502,9 @@ def count_batch(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
-    block_next: int = 256,
-    block_prev: int = 256,
-    window_tiles: int = 0,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Count a batch of same-length episodes over one stream (vmapped).

@@ -211,6 +211,21 @@ def _count_sharded_batch_impl(
     block_next, block_prev, window_tiles, interpret,
 ):
     cap_view = table.shape[2]
+    # the sharded path needs raw intervals for ownership masking + the
+    # cross-shard merge, so it always tracks (kind="track" tuned tiles) —
+    # the single-launch count pipeline cannot serve it
+    try:
+        from ..kernels import autotune  # deferred: core importable sans pallas
+        tc = autotune.resolve(
+            "track", symbols.shape[1] - 1, cap_view, symbols.shape[0],
+            block_next=block_next, block_prev=block_prev,
+            window_tiles=window_tiles)
+        block_next, block_prev, window_tiles = (
+            tc.block_next, tc.block_prev, tc.window_tiles)
+    except ImportError:
+        block_next = 256 if block_next is None else block_next
+        block_prev = 256 if block_prev is None else block_prev
+        window_tiles = 0 if window_tiles is None else window_tiles
     cfg = tracking.EngineConfig(
         cap_occ=cap_occ, max_window=max_window, block_next=block_next,
         block_prev=block_prev, window_tiles=window_tiles, interpret=interpret)
@@ -291,9 +306,9 @@ def count_sharded_batch_indexed(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
-    block_next: int = 256,
-    block_prev: int = 256,
-    window_tiles: int = 0,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Count a batch of same-length episodes on a pre-built sharded index.
@@ -497,9 +512,9 @@ def count_corpus_sharded_indexed(
     cap_occ: Optional[int] = None,
     max_window: int = 32,
     parallel_schedule: bool = False,
-    block_next: int = 256,
-    block_prev: int = 256,
-    window_tiles: int = 0,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Stream-sharded corpus counting: the embarrassingly-parallel path.

@@ -61,9 +61,12 @@ class MinerConfig:
     max_candidates: int = 4096   # safety valve per level
     min_streams: Optional[int] = None  # corpus aggregation: episodes frequent
                                        # in >= this many streams (mine_corpus)
-    block_next: int = 256        # Pallas tile shape (dense_pallas engine)
-    block_prev: int = 256
-    window_tiles: int = 0        # 0 = exact full-window coverage
+    # Pallas tile shape: None = per-(L, N, B)-bucket tuned tiles from
+    # kernels/tuned_configs.json (kernels.autotune; legacy 256/256/0 when no
+    # entry exists); explicit integers bypass the tuned table
+    block_next: Optional[int] = None
+    block_prev: Optional[int] = None
+    window_tiles: Optional[int] = None   # 0 = exact full-window coverage
     interpret: Optional[bool] = None  # None = interpret off-TPU
     # multi-device sharding: give a mesh and mine()/mine_arrays() dispatch
     # to mine_sharded (stream sharded over `shard_axis`, every level's

@@ -271,6 +271,9 @@ class StreamingMiner:
             else:
                 cold_idx.append(i)
 
+        # None block knobs flow to the counting entries, which resolve them
+        # through kernels.autotune — warm tail recounts and cold backfills
+        # inherit per-bucket tuned tiles without any streaming-layer config
         knobs = dict(
             engine=cfg.engine, cap_occ=cfg.cap_occ, max_window=cfg.max_window,
             parallel_schedule=cfg.parallel_schedule, block_next=cfg.block_next,

@@ -245,8 +245,11 @@ class EngineConfig:
 
     ``cap_occ``/``max_window`` size the faithful engines' static occurrence
     buffers; ``block_next``/``block_prev``/``window_tiles`` are the Pallas
-    kernel's tile shape and grid-pruning bound; ``interpret=None`` lets the
-    kernel layer decide (interpret mode anywhere but TPU).
+    kernel's tile shape and grid-pruning bound; ``chunk`` is the fused count
+    kernel's episode-rows-per-grid-step; ``interpret=None`` lets the kernel
+    layer decide (interpret mode anywhere but TPU). Callers that accept
+    ``None`` block knobs resolve them through ``kernels.autotune`` (per-
+    (L, N, B)-bucket tuned tiles) before building this config.
 
     ``t_min`` restricts tracking to occurrences *seeded* at time >= t_min
     (windows only look backward, so this equals counting on the substream of
@@ -262,6 +265,7 @@ class EngineConfig:
     block_next: int = 256
     block_prev: int = 256
     window_tiles: int = 0
+    chunk: int = 8
     interpret: Optional[bool] = None
     t_min: Optional[jax.Array] = None
 
@@ -332,6 +336,22 @@ class TrackingEngine(Protocol):
     whole corpora through it — the fused engine folds ``(stream, episode)``
     into its batch grid dimension, ONE launch per mining level for the
     whole corpus.
+
+    Engines MAY also provide a natively-counting
+
+        ``count_batch(times_by_sym f32[B, N, cap], t_low f32[B, N-1],
+                      t_high f32[B, N-1], prev_end f32[B], prev_count i32[B],
+                      cfg) -> (counts i32[B], end_out f32[B],
+                               n_superset i32[B], overflow bool[B])``
+
+    running tracking + compaction + the ``greedy_scan_state`` non-overlap
+    scheduler end-to-end (carry-in/carry-out chain state, so the streaming
+    stitch is engine-invariant). When present,
+    ``counting.count_batch_dispatch`` routes whole count calls through it —
+    ONE kernel launch per (level, candidate batch), occurrence intervals
+    never leaving VMEM. Engines without it fall back to
+    ``track_batch_dispatch`` + the host-side greedy fold; results are
+    bit-for-bit identical either way.
     """
 
     name: str
@@ -580,6 +600,24 @@ class FusedDensePallasEngine:
             n_superset=n_superset,
             overflow=truncated,
         )
+
+    def count_batch(self, times_by_sym, t_low, t_high, prev_end, prev_count,
+                    cfg: EngineConfig):
+        """Single-launch count pipeline: tracking + in-VMEM count_scan_write
+        compaction + the greedy_scan_state fold, one kernel for the whole
+        batch (kernels/episode_track.py::count_batch_pallas, DESIGN.md §10).
+
+        Returns ``(counts i32[B], end_out f32[B], n_superset i32[B],
+        overflow bool[B])`` with the carried chain state included, exactly
+        as the track + host-greedy path would produce.
+        """
+        from ..kernels import ops  # deferred: core stays importable sans pallas
+
+        bn, bp, _ = _pallas_tile_geometry(times_by_sym.shape[-1], cfg)
+        return ops.count_batch(
+            times_by_sym, t_low, t_high, prev_end, prev_count,
+            block_next=bn, block_prev=bp, window_tiles=cfg.window_tiles,
+            chunk=cfg.chunk, interpret=cfg.interpret)
 
     def track_corpus(self, times_by_sym, t_low, t_high,
                      cfg: EngineConfig) -> Occurrences:

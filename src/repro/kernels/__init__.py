@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the compute hot-spots (+ ops.py wrappers,
 ref.py oracles): episode_track (the paper's parallel local tracking),
 flash_attention, wkv_chunk. All validated in interpret mode on CPU;
-BlockSpec tiling targets TPU VMEM."""
-from . import episode_track, flash_attention, ops, ref, wkv_chunk
+BlockSpec tiling targets TPU VMEM. autotune resolves per-bucket tile
+configs (tuned_configs.json) for the tracking/count launches."""
+from . import autotune, episode_track, flash_attention, ops, ref, wkv_chunk
 
-__all__ = ["episode_track", "flash_attention", "ops", "ref", "wkv_chunk"]
+__all__ = ["autotune", "episode_track", "flash_attention", "ops", "ref",
+           "wkv_chunk"]

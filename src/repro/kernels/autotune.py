@@ -1,0 +1,209 @@
+"""Per-bucket tile autotuning for the Pallas tracking / count kernels.
+
+The fused kernels expose three tile knobs (``block_next`` / ``block_prev`` /
+``window_tiles``) plus the count pipeline's ``chunk`` (episode rows per grid
+step). The best setting depends on the problem *bucket* — episode length L,
+capacity N and batch B — not on a global constant: small streams want tiny
+tiles (less boundary slack per constraint window, more of the latest-start
+row resident per step), large batches amortize per-grid-step overhead with
+bigger chunks.
+
+This module is the single source of truth for that resolution:
+
+* :func:`bucket_key` — ``"kind:L{L}:N{pow2}:B{pow2}"`` buckets (capacity and
+  batch rounded up to powers of two so nearby shapes share an entry).
+* :func:`resolve` — explicit caller overrides > checked-in
+  ``tuned_configs.json`` entry > :data:`DEFAULTS`. Pure function of its
+  arguments and the table file: deterministic, trace-time cheap (dict
+  lookup), safe to call from inside ``jit`` with static shapes.
+* :func:`candidate_configs` / :func:`model_time` — the tuning search space
+  and the cost-model filter. ``model_time`` routes an analytic byte/flop
+  estimate through :func:`analysis.roofline.analyze` (plus a per-grid-step
+  launch-overhead term the roofline cannot see); ``benchmarks/run.py
+  --autotune`` uses it to pre-rank candidates, wall-clocks the survivors,
+  and regenerates ``tuned_configs.json`` — wiring the previously write-only
+  roofline / hlo_costs models into the hot path.
+
+Every counting/mining entry point resolves ``None`` block knobs through
+:func:`resolve`, so ``count_batch_indexed``, ``mine_corpus``,
+``mine_sharded`` and ``StreamingMiner`` all inherit tuned tiles without any
+signature churn; passing explicit integers keeps the exact legacy behavior.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from typing import Dict, List, Optional
+
+from ..analysis import roofline
+
+_CONFIG_PATH = os.path.join(os.path.dirname(__file__), "tuned_configs.json")
+
+# Per-grid-step overhead (s): pallas_call grid sequencing / interpret-mode
+# loop step. Dominates tiny cells; the roofline terms dominate large ones.
+_STEP_OVERHEAD_S = 15e-6
+# Constraint-window span assumed by the analytic model when the true event
+# density is unknown at resolve time (fraction of the capacity).
+_SPAN_FRACTION = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One bucket's tile/grid shape for a Pallas kernel launch."""
+    block_next: int = 256
+    block_prev: int = 256
+    window_tiles: int = 0
+    chunk: int = 8
+
+    def asdict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+#: Fallbacks when no tuned entry exists — the pre-autotune constants, so a
+#: missing/deleted tuned_configs.json reproduces legacy behavior exactly.
+DEFAULTS: Dict[str, TileConfig] = {
+    "track": TileConfig(block_next=256, block_prev=256, window_tiles=0, chunk=8),
+    "count": TileConfig(block_next=256, block_prev=256, window_tiles=0, chunk=8),
+}
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length() if x > 0 else 1
+
+
+def bucket_key(kind: str, levels: int, cap: int, batch: int) -> str:
+    """Deterministic bucket id for a (kernel kind, L, N, B) problem shape."""
+    if kind not in DEFAULTS:
+        raise ValueError(
+            f"unknown kernel kind {kind!r}; expected one of {sorted(DEFAULTS)}")
+    return f"{kind}:L{int(levels)}:N{_pow2_ceil(cap)}:B{_pow2_ceil(batch)}"
+
+
+@functools.lru_cache(maxsize=None)
+def _load_table(path: str) -> Dict[str, Dict[str, int]]:
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    table = raw.get("configs", raw) if isinstance(raw, dict) else {}
+    return {k: v for k, v in table.items() if isinstance(v, dict)}
+
+
+def load_table(path: Optional[str] = None) -> Dict[str, Dict[str, int]]:
+    """The checked-in tuned table ({} when missing/invalid — never raises)."""
+    return dict(_load_table(path or _CONFIG_PATH))
+
+
+def clear_cache() -> None:
+    """Drop the memoized table (tests / post-``--autotune`` regeneration)."""
+    _load_table.cache_clear()
+
+
+def resolve(
+    kind: str,
+    levels: int,
+    cap: int,
+    batch: int,
+    *,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
+    chunk: Optional[int] = None,
+    path: Optional[str] = None,
+) -> TileConfig:
+    """Tile config for a problem bucket.
+
+    Precedence per field: explicit (non-None) caller override, then the
+    tuned-table entry for :func:`bucket_key`, then :data:`DEFAULTS[kind]`.
+    Deterministic: same arguments + same table file => same answer.
+    """
+    base = DEFAULTS[kind] if kind in DEFAULTS else None
+    key = bucket_key(kind, levels, cap, batch)   # validates kind
+    entry = _load_table(path or _CONFIG_PATH).get(key, {})
+
+    def pick(override, field):
+        if override is not None:
+            return int(override)
+        return int(entry.get(field, getattr(base, field)))
+
+    return TileConfig(
+        block_next=pick(block_next, "block_next"),
+        block_prev=pick(block_prev, "block_prev"),
+        window_tiles=pick(window_tiles, "window_tiles"),
+        chunk=pick(chunk, "chunk"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tuning search space + roofline-backed cost model
+# ---------------------------------------------------------------------------
+
+
+def candidate_configs(kind: str, cap: int, batch: int) -> List[TileConfig]:
+    """Deterministic candidate grid for one bucket (exact-tiling configs
+    only; ``window_tiles`` stays 0 — exactness is non-negotiable)."""
+    if kind not in DEFAULTS:
+        raise ValueError(
+            f"unknown kernel kind {kind!r}; expected one of {sorted(DEFAULTS)}")
+    blocks = [b for b in (8, 16, 32, 64, 128, 256) if b <= cap]
+    chunks = [c for c in (8, 16, 32) if c <= max(batch, 8)]
+    out = []
+    for b in blocks:
+        for c in (chunks if kind == "count" else [DEFAULTS[kind].chunk]):
+            out.append(TileConfig(block_next=b, block_prev=b,
+                                  window_tiles=0, chunk=c))
+    return out
+
+
+def model_cost(
+    kind: str, levels: int, cap: int, batch: int, cfg: TileConfig,
+) -> Dict[str, float]:
+    """Analytic per-launch cost estimate, in the cost-dict dialect
+    ``hlo_costs.module_costs`` / ``roofline.analyze`` speak
+    (``flops`` + ``"bytes accessed"``), plus the grid step count."""
+    bn, bp = cfg.block_next, cfg.block_prev
+    next_tiles = max(1, cap // max(bn, 1))
+    # prev events each next event's window is assumed to span, plus the two
+    # boundary tiles of misalignment slack the scan table always includes
+    span = _SPAN_FRACTION * cap + 2 * bp
+    tiles = max(1.0, span / max(bp, 1))
+    pair_ops = batch * levels * cap * tiles * bp     # (next, prev) compares
+    if kind == "count":
+        steps = -(-batch // max(cfg.chunk, 1))
+        # compaction prefix-scan + searchsorted gather + greedy fold
+        epilogue = batch * cap * 8.0
+    else:
+        steps = batch * levels * next_tiles * tiles
+        epilogue = 0.0
+    return {
+        "flops": 4.0 * pair_ops + epilogue,
+        "bytes accessed": 8.0 * pair_ops + 4.0 * epilogue,
+        "grid_steps": float(steps),
+    }
+
+
+def model_time(
+    kind: str, levels: int, cap: int, batch: int, cfg: TileConfig,
+) -> float:
+    """Modelled launch latency (s): roofline compute/memory terms + the
+    per-grid-step overhead the roofline cannot express."""
+    cost = model_cost(kind, levels, cap, batch, cfg)
+    r = roofline.analyze(
+        arch="v5e", shape=f"{kind}:L{levels}:N{cap}:B{batch}",
+        mesh_name="single", chips=1, cost=cost, coll={"total": 0.0},
+        model_flops=0.0)
+    return max(r.t_compute, r.t_memory) + cost["grid_steps"] * _STEP_OVERHEAD_S
+
+
+def rank_candidates(
+    kind: str, levels: int, cap: int, batch: int, top_k: int = 4,
+) -> List[TileConfig]:
+    """Model-ranked candidate shortlist for wall-clock confirmation."""
+    cands = candidate_configs(kind, cap, batch)
+    scored = sorted(cands, key=lambda c: (
+        model_time(kind, levels, cap, batch, c),
+        c.block_next, c.block_prev, c.chunk))
+    return scored[: max(1, top_k)]

@@ -26,6 +26,19 @@ per-(episode, level, next-tile) first-prev-tile offsets and scan lengths
 are scalar-prefetched as one precomputed table, and the window walk is a
 *dynamic* ``fori_loop`` over exactly the prev tiles each next tile's
 constraint window spans — no static quadratic tile coverage at all.
+
+Single-launch count pipeline (DESIGN.md §10): ``count_batch_pallas`` goes
+further — tracking, the paper's §IV-D count_scan_write compaction, AND the
+greedy non-overlap scheduler all run inside ONE kernel. Grid =
+``(batch_chunks,)``: each grid step owns a whole chunk of episodes, walks
+every level with vectorized whole-chunk tile gathers (occurrence intervals
+never leave VMEM), prefix-scans the valid flags and compacts the surviving
+``(start, end)`` intervals in-register (the scatter-write inverted into a
+searchsorted gather — TPU/XLA-friendly either way), then folds the exact
+``greedy_scan_state`` recurrence over ONLY the compacted prefix (a dynamic
+``fori_loop`` bounded by the per-chunk max valid count, not ``cap``). The
+kernel emits final counts plus the carried ``(prev_end, count)`` chain
+state, so the streaming stitch works unchanged.
 """
 from __future__ import annotations
 
@@ -260,3 +273,187 @@ def track_batch_pallas(
         t_high.reshape(-1).astype(jnp.float32),
         times_by_sym, times_by_sym)
     return starts, nsup[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Single-launch count pipeline: tracking + compaction + greedy in one kernel
+# ---------------------------------------------------------------------------
+
+
+def _count_batch_kernel(
+    # array operands (one grid step owns a whole chunk of R episodes)
+    times_ref,          # f32[R, N, cap]   sorted rows, +inf padded
+    t_low_ref,          # f32[R, L]        per-episode, per-level window low
+    t_high_ref,         # f32[R, L]        per-episode, per-level window high
+    start_ref,          # i32[R, L, NT]    first prev tile per next-tile
+    num_ref,            # i32[R, L, NT]    prev tiles to scan per next-tile
+    pend_ref,           # f32[R, 1]        carried greedy prev_end
+    pcnt_ref,           # i32[R, 1]        carried greedy count
+    # outputs
+    count_ref,          # i32[R, 1]        final non-overlapped counts
+    end_ref,            # f32[R, 1]        carried-out prev_end
+    nsup_ref,           # i32[R, 1]        tracked superset sizes
+    *,
+    levels: int,
+    block_next: int,
+    block_prev: int,
+    next_tiles: int,
+):
+    R = times_ref.shape[0]
+    cap = times_ref.shape[2]
+    bn, bp = block_next, block_prev
+
+    # --- tracking: the _track_batch_kernel recurrence, vectorized over the
+    # whole chunk. The latest-start vector v lives in registers/VMEM for the
+    # entire level walk — it is never written back to HBM.
+    t0 = times_ref[:, 0, :]
+    v = jnp.where(jnp.isfinite(t0), t0, NEG)
+    nsup = jnp.sum(jnp.isfinite(t0), axis=-1).astype(jnp.int32)
+    bidx = jnp.arange(bp, dtype=jnp.int32)
+    for l in range(levels):
+        t_next = times_ref[:, l + 1, :]
+        tn = t_next.reshape(R, next_tiles, bn)
+        st = start_ref[:, l, :]
+        num = num_ref[:, l, :]
+        t_lo = t_low_ref[:, l][:, None, None, None]
+        t_hi = t_high_ref[:, l][:, None, None, None]
+        max_num = jnp.max(num)
+        t_prev = times_ref[:, l, :]
+        vprev = v
+
+        def scan_tile(j, acc, st=st, num=num, t_prev=t_prev, vprev=vprev,
+                      tn=tn, t_lo=t_lo, t_hi=t_hi):
+            live = j < num                                     # [R, NT]
+            idx = (st + j)[:, :, None] * bp + bidx[None, None, :]
+            flat = jnp.minimum(idx, cap - 1).reshape(R, -1)
+            tp = jnp.take_along_axis(t_prev, flat, axis=1).reshape(
+                R, next_tiles, bp)
+            vp = jnp.take_along_axis(vprev, flat, axis=1).reshape(
+                R, next_tiles, bp)
+            ok = (tp[:, :, None, :] >= tn[..., None] - t_hi) & (
+                tp[:, :, None, :] < tn[..., None] - t_lo)      # [R, NT, BN, BP]
+            contrib = jnp.max(jnp.where(ok, vp[:, :, None, :], NEG), axis=-1)
+            return jnp.maximum(acc, jnp.where(live[:, :, None], contrib, NEG))
+
+        acc = jax.lax.fori_loop(
+            0, max_num, scan_tile,
+            jnp.full((R, next_tiles, bn), NEG, jnp.float32))
+        v = jnp.where(jnp.isfinite(t_next), acc.reshape(R, cap), NEG)
+        nsup = nsup + jnp.sum(v > NEG, axis=-1).astype(jnp.int32)
+
+    # --- in-VMEM count_scan_write compaction (paper §IV-D): prefix-scan the
+    # keep flags, then invert the scatter-write into a gather — row r's k-th
+    # surviving interval sits at searchsorted(csum[r], k+1). Bit-identical to
+    # the scatter formulation and far cheaper on both XLA-CPU and TPU.
+    ends = times_ref[:, levels, :]
+    valid = (v > NEG) & jnp.isfinite(ends)
+    keep = valid.astype(jnp.int32)
+    csum = jnp.cumsum(keep, axis=1)
+    targets = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)[0] + 1
+    src = jax.vmap(lambda c: jnp.searchsorted(c, targets, side="left"))(csum)
+    src_c = jnp.minimum(src, cap - 1)
+    live = src < cap
+    sT = jnp.where(live, jnp.take_along_axis(v, src_c, axis=1), NEG).T
+    eT = jnp.where(live, jnp.take_along_axis(ends, src_c, axis=1), jnp.inf).T
+    m = csum[:, -1]                                            # valid per row
+
+    # --- greedy non-overlap scheduling: exactly scheduling.greedy_scan_state
+    # (take iff valid & start > prev_end, strict — ties rejected), folded
+    # over ONLY the compacted prefix: max(m) trips instead of cap.
+    def step(j, carry):
+        prev_e, cnt = carry
+        s_j = jax.lax.dynamic_slice_in_dim(sT, j, 1, axis=0)[0]
+        e_j = jax.lax.dynamic_slice_in_dim(eT, j, 1, axis=0)[0]
+        take = (j < m) & (s_j > prev_e)
+        return (jnp.where(take, e_j, prev_e), cnt + take.astype(jnp.int32))
+
+    prev_e, cnt = jax.lax.fori_loop(
+        0, jnp.max(m), step,
+        (pend_ref[:, 0], jnp.zeros((R,), jnp.int32)))
+    count_ref[:, 0] = pcnt_ref[:, 0] + cnt
+    end_ref[:, 0] = prev_e
+    nsup_ref[:, 0] = nsup
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_next", "block_prev", "chunk", "interpret"),
+)
+def count_batch_pallas(
+    times_by_sym: jax.Array,    # f32[B, N, cap] sorted rows, +inf padded
+    t_low: jax.Array,           # f32[B, N-1]
+    t_high: jax.Array,          # f32[B, N-1]
+    start_tile: jax.Array,      # i32[B, N-1, next_tiles]
+    num_tiles: jax.Array,       # i32[B, N-1, next_tiles]
+    prev_end: jax.Array,        # f32[B] carried greedy prev_end
+    prev_count: jax.Array,      # i32[B] carried greedy count
+    *,
+    block_next: int = 256,
+    block_prev: int = 256,
+    chunk: int = 8,
+    interpret: bool = False,
+) -> tuple:
+    """Whole-batch tracking + compaction + greedy counting, ONE launch.
+
+    Returns ``(counts i32[B], end_out f32[B], n_superset i32[B])``: the
+    final non-overlapped counts (carry-in ``prev_count`` included), the
+    carried-out greedy ``prev_end`` state, and the tracked superset sizes.
+    Occurrence intervals never round-trip to HBM — only these O(B) scalars
+    leave the kernel. ``chunk`` is the number of episode rows each grid step
+    owns; the batch is row-padded (+inf times scan zero tiles: a no-op) up
+    to a chunk multiple.
+    """
+    batch, n, cap = times_by_sym.shape
+    levels = n - 1
+    if levels < 1:
+        raise ValueError("need at least a 2-symbol episode for the kernel")
+    bn = min(block_next, cap)
+    bp = min(block_prev, cap)
+    if cap % bn or cap % bp:
+        raise ValueError(f"cap={cap} must be a multiple of block sizes {bn},{bp}")
+    next_tiles = cap // bn
+    r = max(1, min(chunk, batch))
+    nchunks = -(-batch // r)
+    pad = nchunks * r - batch
+    if pad:
+        def padrow(x, fill):
+            return jnp.concatenate(
+                [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+        times_by_sym = padrow(times_by_sym, jnp.inf)
+        t_low = padrow(t_low, 0)
+        t_high = padrow(t_high, 0)
+        start_tile = padrow(start_tile, 0)
+        num_tiles = padrow(num_tiles, 0)
+        prev_end = padrow(prev_end, NEG)
+        prev_count = padrow(prev_count, 0)
+    kernel = pl.pallas_call(
+        functools.partial(
+            _count_batch_kernel, levels=levels, block_next=bn, block_prev=bp,
+            next_tiles=next_tiles),
+        grid=(nchunks,),
+        in_specs=[
+            pl.BlockSpec((r, n, cap), lambda c: (c, 0, 0)),
+            pl.BlockSpec((r, levels), lambda c: (c, 0)),
+            pl.BlockSpec((r, levels), lambda c: (c, 0)),
+            pl.BlockSpec((r, levels, next_tiles), lambda c: (c, 0, 0)),
+            pl.BlockSpec((r, levels, next_tiles), lambda c: (c, 0, 0)),
+            pl.BlockSpec((r, 1), lambda c: (c, 0)),
+            pl.BlockSpec((r, 1), lambda c: (c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r, 1), lambda c: (c, 0)),
+            pl.BlockSpec((r, 1), lambda c: (c, 0)),
+            pl.BlockSpec((r, 1), lambda c: (c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nchunks * r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nchunks * r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nchunks * r, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    cnt, end, nsup = kernel(
+        times_by_sym, t_low.astype(jnp.float32), t_high.astype(jnp.float32),
+        start_tile, num_tiles,
+        prev_end.astype(jnp.float32)[:, None], prev_count[:, None])
+    return cnt[:batch, 0], end[:batch, 0], nsup[:batch, 0]

@@ -382,3 +382,108 @@ def track_corpus(
         times_by_sym, t_low, t_high,
         block_next=block_next, block_prev=block_prev,
         window_tiles=window_tiles, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-launch count pipeline wrapper
+# ---------------------------------------------------------------------------
+
+
+def count_batch(
+    times_by_sym: jax.Array,    # f32[..., N, cap] sorted rows, +inf padded
+    t_low: jax.Array,           # f32[..., N-1]
+    t_high: jax.Array,          # f32[..., N-1]
+    prev_end: jax.Array,        # f32[...] carried greedy prev_end
+    prev_count: jax.Array,      # i32[...] carried greedy count
+    *,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    chunk: int = 8,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Whole candidate batch, tracking + compaction + greedy, one launch.
+
+    Returns ``(counts i32[B], end_out f32[B], n_superset i32[B],
+    truncated bool[B])``. Counts include the ``prev_count`` carry-in and
+    ``end_out`` is the carried greedy state, so streaming chain-state
+    stitching works exactly as with the track + host-greedy path. The
+    per-(episode, level) latest-start tables and occurrence intervals never
+    leave VMEM — only these O(B) scalars do. ``chunk`` sets how many episode
+    rows each grid step owns (the count-kernel analogue of the track path's
+    interpret chunking; on TPU it bounds per-step VMEM).
+
+    Stream axis: stacked leading dims fold into the kernel's batch grid
+    dimension, mirroring :func:`track_batch`.
+    """
+    lead = times_by_sym.shape[:-2]
+    if len(lead) > 1:
+        rows = math.prod(lead)
+        counts, end_out, nsup, truncated = count_batch(
+            times_by_sym.reshape((rows,) + times_by_sym.shape[-2:]),
+            t_low.reshape((rows,) + t_low.shape[-1:]),
+            t_high.reshape((rows,) + t_high.shape[-1:]),
+            prev_end.reshape(rows), prev_count.reshape(rows),
+            block_next=block_next, block_prev=block_prev,
+            window_tiles=window_tiles, chunk=chunk, interpret=interpret)
+        return (counts.reshape(lead), end_out.reshape(lead),
+                nsup.reshape(lead), truncated.reshape(lead))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    batch, n, cap = times_by_sym.shape
+    prev_end = jnp.asarray(prev_end, jnp.float32)
+    prev_count = jnp.asarray(prev_count, jnp.int32)
+    if n == 1:
+        # No transitions: every first-symbol event is a [t, t] occurrence.
+        # Greedy over sorted point intervals takes each finite time strictly
+        # greater than both the running prev_end and its predecessor (ties
+        # rejected, matching greedy_scan_state's strict `start > prev_end`).
+        t0 = times_by_sym[:, 0, :]
+        finite = jnp.isfinite(t0)
+        pred = jnp.concatenate(
+            [jnp.full((batch, 1), NEG, t0.dtype), t0[:, :-1]], axis=1)
+        take = finite & (t0 > prev_end[:, None]) & (t0 > pred)
+        cnt = jnp.sum(take, axis=1).astype(jnp.int32)
+        last = jnp.max(jnp.where(take, t0, NEG), axis=1)
+        end_out = jnp.where(cnt > 0, last, prev_end)
+        nsup = jnp.sum(finite, axis=-1).astype(jnp.int32)
+        return prev_count + cnt, end_out, nsup, jnp.zeros((batch,), bool)
+    bn, bp, pcap = tile_geometry(cap, block_next, block_prev)
+    padded = _pad_tail(times_by_sym, pcap, jnp.inf)
+    start_tile, num_tiles, truncated = window_scan_table(
+        padded, t_high, bn, bp, window_tiles)
+    counts, end_out, nsup = _et.count_batch_pallas(
+        padded, jnp.asarray(t_low, jnp.float32),
+        jnp.asarray(t_high, jnp.float32), start_tile, num_tiles,
+        prev_end, prev_count,
+        block_next=bn, block_prev=bp, chunk=chunk, interpret=interpret)
+    return counts, end_out, nsup, truncated
+
+
+def count_corpus(
+    times_by_sym: jax.Array,    # f32[S, B, N, cap] sorted rows, +inf padded
+    t_low: jax.Array,           # f32[B, N-1] shared across streams
+    t_high: jax.Array,          # f32[B, N-1]
+    *,
+    block_next: int = 256,
+    block_prev: int = 256,
+    window_tiles: int = 0,
+    chunk: int = 8,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Corpus count: streams x episodes folded into one fused count launch.
+
+    Fresh (-inf, 0) carries per (stream, episode) row — corpus counting is
+    stateless. Returns ``(counts i32[S, B], end_out f32[S, B],
+    n_superset i32[S, B], truncated bool[S, B])``.
+    """
+    s, b = times_by_sym.shape[0], times_by_sym.shape[1]
+    t_low = jnp.broadcast_to(
+        jnp.asarray(t_low, jnp.float32)[None], (s,) + t_low.shape)
+    t_high = jnp.broadcast_to(
+        jnp.asarray(t_high, jnp.float32)[None], (s,) + t_high.shape)
+    return count_batch(
+        times_by_sym, t_low, t_high,
+        jnp.full((s, b), NEG, jnp.float32), jnp.zeros((s, b), jnp.int32),
+        block_next=block_next, block_prev=block_prev,
+        window_tiles=window_tiles, chunk=chunk, interpret=interpret)
