@@ -1,0 +1,174 @@
+"""Compile amortization: the MiningPlan AOT executable cache under ragged shapes.
+
+The workload is the failure mode the plan spine exists for: many
+mine_arrays calls over streams of *nearby but unequal* lengths. Without
+capacity-class bucketing every fresh length is a fresh trace+compile;
+with it, lengths sharing a pow2 class share one AOT executable, so the
+sweep compiles O(#buckets) times total — and this suite *proves* that,
+not just times it: after the cold pass it asserts
+
+    kernel traces == cache misses == distinct cached plans
+
+(one trace per compiled executable, ever) and that the warm pass adds
+zero of each. The headline cell is the first-call (trace+compile+run)
+vs warm-call (dispatch-only) latency ratio for the ``dense`` engine;
+it must show >= ``RATIO_TARGET`` and the harness enforces it with a
+raise, not a CSV line. A warm-start cell then measures ``plan.warm`` on
+the full bucket set from a cold cache and re-runs the sweep asserting
+zero misses — the "preload at startup, never compile mid-session"
+protocol of DESIGN.md §11.
+
+Full mode writes the checked-in ``BENCH_compile.json`` baseline;
+``REPRO_BENCH_SMOKE=1`` shrinks the sweep to two capacity classes and
+writes a throwaway ``BENCH_compile.smoke.json`` sidecar instead.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import EventStream, MinerConfig, mine_arrays, plan
+
+from .common import emit
+
+N_TYPES = 4
+RATIO_TARGET = 5.0          # first call (trace+compile) vs warm call
+HEADLINE_ENGINE = "dense"
+
+# Ragged lengths grouped so each row lands in one pow2 capacity class.
+FULL_LENGTHS = (
+    33, 40, 48, 52, 60, 64,         # class 64
+    70, 84, 100, 112, 120, 128,     # class 128
+    130, 160, 192, 224, 250, 256,   # class 256
+    260, 320, 384, 448, 500, 512,   # class 512
+)
+SMOKE_LENGTHS = (33, 48, 60, 70, 100, 120)   # classes 64 + 128
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+
+def _stream(n: int, seed: int) -> EventStream:
+    rng = np.random.default_rng(seed)
+    # round-robin types: every type present at every length, so the level
+    # structure (hence the candidate-batch classes) is stable across rows
+    types = (np.arange(n) % N_TYPES).astype(np.int32)
+    times = np.cumsum(rng.exponential(0.25, n)).astype(np.float32)
+    return EventStream(types, times, N_TYPES)
+
+
+def _cfg(engine: str) -> MinerConfig:
+    return MinerConfig(t_low=0.05, t_high=1.0, threshold=2, max_level=3,
+                       engine=engine)
+
+
+def _timed_sweep(lengths, cfg):
+    """mine_arrays per length; returns [(n, us, misses_delta), ...]."""
+    rows = []
+    for i, n in enumerate(lengths):
+        stream = _stream(n, seed=i)
+        before = plan.cache_stats()["misses"]
+        t0 = time.perf_counter()
+        mine_arrays(stream, cfg)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((n, us, plan.cache_stats()["misses"] - before))
+    return rows
+
+
+def run() -> None:
+    smoke = _smoke()
+    lengths = SMOKE_LENGTHS if smoke else FULL_LENGTHS
+    engines = ((HEADLINE_ENGINE,) if smoke
+               else (HEADLINE_ENGINE, "dense_pallas_fused"))
+    report = {"entries": [], "summary": {}}
+
+    for engine in engines:
+        cfg = _cfg(engine)
+        plan.reset_cache()
+        plan.reset_trace_counts()
+
+        cold = _timed_sweep(lengths, cfg)
+        traces = sum(plan.trace_counts().values())
+        stats = plan.cache_stats()
+        n_plans = len(plan.cached_plans())
+        # the O(#buckets) claim, as an assertion: every compile is a distinct
+        # plan bucket, every bucket compiled exactly once
+        if not (traces == stats["misses"] == n_plans):
+            raise RuntimeError(
+                f"compile accounting broken for {engine}: traces={traces} "
+                f"misses={stats['misses']} cached plans={n_plans} — "
+                "expected all equal (one trace per bucket, ever)")
+
+        warm = _timed_sweep(lengths, cfg)
+        wstats = plan.cache_stats()
+        new_traces = sum(plan.trace_counts().values()) - traces
+        if wstats["misses"] != stats["misses"] or new_traces:
+            raise RuntimeError(
+                f"warm pass recompiled for {engine}: "
+                f"{wstats['misses'] - stats['misses']} new misses, "
+                f"{new_traces} new traces (expected 0)")
+
+        first_us = float(np.median([us for _, us, m in cold if m > 0]))
+        warm_us = float(np.median([us for _, us, _ in warm]))
+        ratio = first_us / max(warm_us, 1e-9)
+        for (n, cus, m), (_, wus, _) in zip(cold, warm):
+            report["entries"].append({
+                "engine": engine, "n_events": n,
+                "cap_class": plan.capacity_class(n),
+                "cold_us": cus, "warm_us": wus, "misses": m})
+        emit(f"compile_first_call_{engine}", first_us,
+             f"buckets={n_plans} calls={len(lengths)} traces={traces}")
+        emit(f"compile_warm_call_{engine}", warm_us,
+             f"hits={wstats['hits']} ratio={ratio:.1f}x")
+
+        summary = {"buckets": n_plans, "calls": len(lengths),
+                   "traces": traces, "misses": stats["misses"],
+                   "hits": wstats["hits"], "first_us": first_us,
+                   "warm_us": warm_us, "ratio": ratio}
+
+        if engine == HEADLINE_ENGINE:
+            # warm-start: preload every bucket from a cold cache, then the
+            # whole sweep must run without a single compile
+            plans = plan.cached_plans()
+            plan.reset_cache()
+            t0 = time.perf_counter()
+            warmed = plan.warm(plans)
+            warm_start_us = (time.perf_counter() - t0) * 1e6
+            replay = _timed_sweep(lengths, cfg)
+            rstats = plan.cache_stats()
+            if rstats["misses"]:
+                raise RuntimeError(
+                    f"sweep after warm({len(plans)} plans) still compiled "
+                    f"{rstats['misses']} time(s) — warm-start preload is "
+                    "not covering the workload")
+            emit("compile_warm_start", warm_start_us,
+                 f"plans={len(plans)} compiled={warmed['compiled']} "
+                 f"replay_misses={rstats['misses']}")
+            summary["warm_start_us"] = warm_start_us
+            summary["warm_start_plans"] = len(plans)
+            summary["replay_warm_us"] = float(
+                np.median([us for _, us, _ in replay]))
+
+            verdict = "PASS" if ratio >= RATIO_TARGET else "FAIL"
+            emit("compile_headline_ratio", first_us,
+                 f"{ratio:.1f}x first-vs-warm ({engine}, "
+                 f"target >={RATIO_TARGET:.0f}x: {verdict})")
+            if ratio < RATIO_TARGET:
+                # a real gate, not a CSV line someone has to read
+                raise RuntimeError(
+                    f"compile-cache headline ratio {ratio:.1f}x is below "
+                    f"the >={RATIO_TARGET:.0f}x target (engine {engine})")
+        report["summary"][engine] = summary
+
+    import jax
+    path = pathlib.Path(
+        "BENCH_compile.smoke.json" if smoke else "BENCH_compile.json")
+    path.write_text(json.dumps(
+        {"backend": jax.default_backend(), "suite": "compile_cache",
+         **report}, indent=2) + "\n")
+    emit("compile_json_written", 0.0, str(path))

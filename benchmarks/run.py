@@ -268,7 +268,7 @@ def run_autotune(top_k: int = 3, out_path: str | None = None) -> int:
 
 
 SUITE_NAMES = ("counting", "mining", "corpus", "streaming", "episode_length",
-               "frequency", "instruction_mix", "distributed")
+               "frequency", "instruction_mix", "distributed", "compile")
 
 
 def unknown_suites(chosen) -> list:
@@ -316,8 +316,8 @@ def main() -> None:
     if unknown:
         ap.error(f"unknown suite(s) {','.join(unknown)!r}; "
                  f"valid suites: {', '.join(SUITE_NAMES)}")
-    from . import (bench_corpus, bench_counting, bench_distributed,
-                   bench_episode_length, bench_frequency,
+    from . import (bench_compile, bench_corpus, bench_counting,
+                   bench_distributed, bench_episode_length, bench_frequency,
                    bench_instruction_mix, bench_mining, bench_streaming)
     suites = {
         "counting": bench_counting.run,            # paper Figs 9-10 + engine sweep
@@ -328,6 +328,7 @@ def main() -> None:
         "frequency": bench_frequency.run,          # paper Fig 12
         "instruction_mix": bench_instruction_mix.run,  # paper Table III
         "distributed": bench_distributed.run,      # beyond-paper scaling
+        "compile": bench_compile.run,              # AOT plan-cache amortization
     }
     print("name,us_per_call,derived")
     failed = 0

@@ -16,7 +16,8 @@ import time
 
 import numpy as np
 
-from repro.core import EventStream, MinerConfig, StreamingMiner, mine_arrays
+from repro.core import (EventStream, MinerConfig, StreamingMiner,
+                        cache_stats, mine_arrays, warm)
 
 
 def make_session(rng, n_types=6, duration=40.0, cascade_after=20.0):
@@ -41,7 +42,16 @@ def main():
     n_types = 6
     types, times = make_session(rng, n_types)
     cfg = MinerConfig(t_low=0.004, t_high=0.016, threshold=40, max_level=3)
-    miner = StreamingMiner(n_types, cfg)
+    # Serving startup (DESIGN.md §11): size the index for the whole session
+    # up front (no mid-session growth, hence no mid-session recompile) and
+    # warm every executable the live loop can dispatch — plain per-level
+    # counts, cold backfills, and tail recounts at the expected tail-view
+    # widths (chunk size + event rate x constraint span bound them).
+    per_type = int(np.bincount(types, minlength=n_types).max())
+    miner = StreamingMiner(n_types, cfg, initial_cap=per_type)
+    warmed = warm(miner.plans(tail_caps=(16, 32, 64)))
+    print(f"plan cache warmed: {warmed['compiled']} executable(s) before "
+          "the first chunk")
 
     chunk = max(1, types.size // 16)
     seen = set()
@@ -63,6 +73,10 @@ def main():
         print(line)
         seen = found
 
+    stats = cache_stats()
+    print(f"plan cache after the session: {stats['hits']} hit(s), "
+          f"{stats['misses']} miss(es) — every miss is one compile the "
+          "warm() preload did not anticipate")
     assert (0, 1, 2) in seen, "injected cascade should be discovered"
     # the streaming state is bit-for-bit the cold answer on the full session
     cold = mine_arrays(EventStream(types, times, n_types), cfg)

@@ -14,6 +14,8 @@ from .mining import (MinerConfig, LevelResult, LevelArrays, mine, mine_arrays,
 from .corpus import (CorpusResult, aggregate_min_streams, mine_corpus,
                      pad_corpus)
 from .streaming import StreamingMiner
+from .plan import (MiningPlan, plan_for, warm, cache_stats, cached_plans,
+                   cache_disabled, plans_for_miner, capacity_class, pow2_ceil)
 from .tracking import (TrackingEngine, EngineConfig, register_engine,
                        get_engine, engine_names)
 from .statemachine import (count_fsm_numpy, count_fsm_scan, greedy_numpy,
@@ -51,4 +53,8 @@ __all__ = [
     "count_mapconcat", "ShardedIndex", "build_sharded_index", "count_sharded",
     "count_sharded_batch", "count_sharded_batch_indexed", "shard_stream",
     "compaction", "scheduling", "tracking", "telemetry",
+    "MiningPlan", "plan_for", "warm", "cache_stats", "cached_plans",
+    "cache_disabled", "plans_for_miner", "capacity_class", "pow2_ceil",
+    "plan",
 ]
+from . import plan  # noqa: E402  (module handle for stats/reset in tests)

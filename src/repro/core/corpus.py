@@ -197,16 +197,33 @@ def mine_corpus(
     else:
         tables, type_counts = events_lib.type_index_batch(
             types, times, n_types, cap)                   # built ONCE
-        binc = np.asarray(type_counts)                    # level-1 host sync
+        binc = np.asarray(type_counts)[:n_streams]        # level-1 host sync
+        # pad ONCE to the plan bucket: capacity class on the table width,
+        # capacity class on the stream axis (all-+inf rows count nothing
+        # and are sliced away below) — every level of every same-class
+        # corpus then reuses ONE cached executable (plan.py). build_cap
+        # pins overflow checks to the true build width.
+        from . import plan as plan_mod
+        tables = plan_mod.pad_width(
+            tables, plan_mod.capacity_class(cap), jnp.inf)
+        s_pad = plan_mod.capacity_class(n_streams) - n_streams
+        if s_pad:
+            tables = jnp.concatenate(
+                [tables, jnp.full((s_pad,) + tables.shape[1:], jnp.inf,
+                                  jnp.float32)], axis=0)
+            type_counts = jnp.concatenate(
+                [type_counts, jnp.zeros((s_pad, n_types), jnp.int32)], axis=0)
 
         def count_level(sym, lo, hi, thr):
+            thr_padded = np.concatenate([thr, np.zeros((s_pad,), np.int32)])
             return counting.count_corpus_indexed(
-                tables, type_counts, sym, lo, hi, jnp.asarray(thr),
+                tables, type_counts, sym, lo, hi, jnp.asarray(thr_padded),
                 engine=cfg.engine, cap_occ=cfg.cap_occ,
                 max_window=cfg.max_window,
                 parallel_schedule=cfg.parallel_schedule,
                 block_next=cfg.block_next, block_prev=cfg.block_prev,
-                window_tiles=cfg.window_tiles, interpret=cfg.interpret)
+                window_tiles=cfg.window_tiles, interpret=cfg.interpret,
+                build_cap=cap)
 
     # level 1: per-stream single-type episodes (one transfer did all S)
     results: List[Dict[int, LevelArrays]] = []

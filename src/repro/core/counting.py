@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from . import events as events_lib
+from . import plan as plan_mod
 from . import scheduling, tracking
 from .episodes import Episode
 
@@ -143,19 +144,14 @@ def _resolve_tiles(eng, levels: int, cap: int, batch: int,
     ``"count"`` when the engine counts natively (the single-launch pipeline
     has its own tuned shapes), ``"track"`` otherwise; explicit integers win
     field-by-field. Resolution is trace-time only (shapes are static under
-    jit), so the hot path pays a dict lookup, nothing more.
+    jit), so the hot path pays a dict lookup, nothing more. Thin wrapper
+    over :func:`plan.resolve_tiles` — the MiningPlan spine and the direct
+    per-episode path must resolve identically.
     """
-    kind = "count" if getattr(eng, "count_batch", None) is not None else "track"
-    try:
-        from ..kernels import autotune  # deferred: core importable sans pallas
-    except ImportError:
-        return (256 if block_next is None else block_next,
-                256 if block_prev is None else block_prev,
-                0 if window_tiles is None else window_tiles, 8)
-    cfg = autotune.resolve(
-        kind, levels, cap, batch, block_next=block_next,
+    bn, bp, wt, chunk, _ = plan_mod.resolve_tiles(
+        eng, levels, cap, batch, block_next=block_next,
         block_prev=block_prev, window_tiles=window_tiles)
-    return cfg.block_next, cfg.block_prev, cfg.window_tiles, cfg.chunk
+    return bn, bp, wt, chunk
 
 
 def count_batch_dispatch(
@@ -233,11 +229,174 @@ def _fresh_carries(batch: int):
             jnp.zeros((batch,), jnp.int32))
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("engine", "cap_occ", "max_window", "parallel_schedule",
-                     "block_next", "block_prev", "window_tiles", "interpret"),
-)
+# ---------------------------------------------------------------------------
+# MiningPlan builders: the traced bodies behind the AOT executable cache.
+# Each closes over a plan (static config) and reads batch/level/cap from its
+# argument shapes; `plan.note_trace` inside the body makes trace counts ==
+# compile counts observable (DESIGN.md §11). `build_cap` rides as a TRACED
+# i32 scalar: adapters pad tables out to the plan's capacity class with
+# +inf, so the overflow check must compare against the width the index was
+# *built* at, not the padded width — bit-for-bit the unpadded semantics.
+# ---------------------------------------------------------------------------
+
+
+def _engine_cfg(p: plan_mod.MiningPlan, t_min=None) -> tracking.EngineConfig:
+    return tracking.EngineConfig(
+        cap_occ=p.cap_occ, max_window=p.max_window, block_next=p.block_next,
+        block_prev=p.block_prev, window_tiles=p.window_tiles, chunk=p.chunk,
+        interpret=p.interpret, t_min=t_min)
+
+
+def _build_count_indexed(p: plan_mod.MiningPlan):
+    def fn(table, counts, build_cap, symbols, t_low, t_high):
+        plan_mod.note_trace(p)
+        index_overflow = jnp.any(counts > build_cap)
+        batch_counts, _, n_superset, overflow = count_batch_dispatch(
+            tracking.get_engine(p.engine), table[symbols], t_low, t_high,
+            *_fresh_carries(symbols.shape[0]), _engine_cfg(p),
+            parallel_schedule=p.parallel_schedule)
+        return batch_counts, n_superset, overflow | index_overflow
+    return fn
+
+
+def _build_count_stateful(p: plan_mod.MiningPlan):
+    def fn(table, counts, build_cap, symbols, t_low, t_high,
+           prev_end, prev_count):
+        plan_mod.note_trace(p)
+        index_overflow = jnp.any(counts > build_cap)
+        count_out, end_out, n_superset, overflow = count_batch_dispatch(
+            tracking.get_engine(p.engine), table[symbols], t_low, t_high,
+            prev_end, prev_count, _engine_cfg(p),
+            parallel_schedule=p.parallel_schedule)
+        return count_out, end_out, n_superset, overflow | index_overflow
+    return fn
+
+
+def _build_count_tail(p: plan_mod.MiningPlan):
+    tail_cap = p.tail_cap
+
+    def fn(table, counts, old_counts, build_cap, t_tail_start,
+           symbols, t_low, t_high, prev_end, prev_count):
+        plan_mod.note_trace(p)
+        cap = table.shape[1]
+        t_tail_start = jnp.asarray(t_tail_start, jnp.float32)
+        # per-type suffix offset: first indexed event at/after the cutoff
+        # (one searchsorted over the [n_types, cap] table, not per row)
+        suffix_start = jax.vmap(
+            lambda row: jnp.searchsorted(row, t_tail_start, side="left"))(
+            table).astype(jnp.int32)                       # [n_types]
+        starts = suffix_start[symbols]                     # [B, N]
+        starts = starts.at[:, -1].set(old_counts[symbols[:, -1]])
+        # clip at build_cap, not the padded width: entries past the build
+        # width never existed, so they must not inflate the suffix need
+        needed = jnp.minimum(counts, build_cap)[symbols] - starts
+        tail_short = jnp.any(needed > tail_cap, axis=-1)   # [B]
+        idx = starts[:, :, None] + jnp.arange(tail_cap, dtype=jnp.int32)
+        view = table[symbols[:, :, None], jnp.minimum(idx, cap - 1)]
+        view = jnp.where(idx < cap, view, jnp.inf)         # [B, N, tail_cap]
+
+        index_overflow = jnp.any(counts > build_cap)
+        count_out, end_out, n_superset, overflow = count_batch_dispatch(
+            tracking.get_engine(p.engine), view, t_low, t_high,
+            prev_end, prev_count, _engine_cfg(p, t_min=t_tail_start),
+            parallel_schedule=p.parallel_schedule)
+        return (count_out, end_out, n_superset,
+                overflow | index_overflow, tail_short)
+    return fn
+
+
+def _build_count_corpus(p: plan_mod.MiningPlan):
+    def fn(tables, counts, build_cap, symbols, t_low, t_high, thresholds):
+        plan_mod.note_trace(p)
+        s, b = tables.shape[0], symbols.shape[0]
+        index_overflow = jnp.any(counts > build_cap, axis=-1)   # [S]
+        eng = tracking.get_engine(p.engine)
+        cfg = _engine_cfg(p)
+        if getattr(eng, "count_batch", None) is not None:
+            # corpus-native counting: (stream, episode) rows fold into ONE
+            # single-launch count pipeline call — fresh carries, stateless
+            corpus_counts, _, n_superset, overflow = count_batch_dispatch(
+                eng, tables[:, symbols],
+                jnp.broadcast_to(t_low[None], (s,) + t_low.shape),
+                jnp.broadcast_to(t_high[None], (s,) + t_high.shape),
+                jnp.full((s, b), -jnp.inf, jnp.float32),
+                jnp.zeros((s, b), jnp.int32), cfg,
+                parallel_schedule=p.parallel_schedule)
+        else:
+            occ = tracking.track_corpus_dispatch(
+                eng, tables[:, symbols], t_low, t_high, cfg)
+
+            def schedule(starts, ends, valid):
+                one = tracking.Occurrences(
+                    starts, ends, valid, jnp.int32(0), jnp.bool_(False))
+                return scheduling.greedy_count(
+                    one, parallel=p.parallel_schedule)
+
+            corpus_counts = jax.vmap(jax.vmap(schedule))(
+                occ.starts, occ.ends, occ.valid)
+            n_superset, overflow = occ.n_superset, occ.overflow
+        keep = corpus_counts >= thresholds.astype(jnp.int32)[:, None]
+        return (corpus_counts, keep, n_superset,
+                overflow | index_overflow[:, None])
+    return fn
+
+
+def _specs_count_indexed(p):
+    S, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
+    return (S((p.n_types, p.cap), f32), S((p.n_types,), i32), S((), i32),
+            S((p.batch, p.level), i32), S((p.batch, p.level - 1), f32),
+            S((p.batch, p.level - 1), f32))
+
+
+def _specs_count_stateful(p):
+    S, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
+    return _specs_count_indexed(p) + (S((p.batch,), f32), S((p.batch,), i32))
+
+
+def _specs_count_tail(p):
+    S, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
+    return (S((p.n_types, p.cap), f32), S((p.n_types,), i32),
+            S((p.n_types,), i32), S((), i32), S((), f32),
+            S((p.batch, p.level), i32), S((p.batch, p.level - 1), f32),
+            S((p.batch, p.level - 1), f32), S((p.batch,), f32),
+            S((p.batch,), i32))
+
+
+def _specs_count_corpus(p):
+    S, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
+    return (S((p.streams, p.n_types, p.cap), f32),
+            S((p.streams, p.n_types), i32), S((), i32),
+            S((p.batch, p.level), i32), S((p.batch, p.level - 1), f32),
+            S((p.batch, p.level - 1), f32), S((p.streams,), i32))
+
+
+plan_mod.register_fn("count_indexed", _build_count_indexed,
+                     _specs_count_indexed)
+plan_mod.register_fn("count_stateful", _build_count_stateful,
+                     _specs_count_stateful)
+plan_mod.register_fn("count_tail", _build_count_tail, _specs_count_tail)
+plan_mod.register_fn("count_corpus", _build_count_corpus, _specs_count_corpus)
+
+
+# ---------------------------------------------------------------------------
+# Public batched entries: thin adapters over the MiningPlan dispatch spine.
+# Each resolves a plan (shapes rounded to capacity classes), pads inputs to
+# the bucket (+inf table columns / repeated candidate rows — both inert by
+# the DESIGN.md §5 padding conventions), dispatches the cached executable,
+# and slices the true rows back out. Signatures are unchanged from the
+# pre-plan jitted versions; `build_cap` is new (default: the incoming table
+# width, i.e. exactly the old overflow semantics).
+# ---------------------------------------------------------------------------
+
+
+def _plan_knobs(engine, parallel_schedule, cap_occ, max_window, block_next,
+                block_prev, window_tiles, interpret):
+    return dict(engine=engine, parallel_schedule=parallel_schedule,
+                cap_occ=cap_occ, max_window=max_window, block_next=block_next,
+                block_prev=block_prev, window_tiles=window_tiles,
+                interpret=interpret)
+
+
 def count_batch_indexed(
     table: jax.Array,       # f32[n_types, cap] per-type time index
     counts: jax.Array,      # i32[n_types] true per-type totals (pre-clip)
@@ -253,6 +412,7 @@ def count_batch_indexed(
     block_prev: Optional[int] = None,
     window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
+    build_cap: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Count a batch of same-length episodes on a *pre-built* type index.
 
@@ -260,33 +420,39 @@ def count_batch_indexed(
     level — the paper's pre-processing amortization extended across the
     whole level-wise search. Returns (counts[B], n_superset[B], overflow[B]).
 
-    Counting goes through :func:`count_batch_dispatch`: engines exposing the
-    natively-counting ``count_batch`` protocol method run tracking +
-    compaction + greedy scheduling in ONE kernel launch per (level, batch);
-    engines with only ``track_batch`` get one fused tracking launch plus the
-    host-side greedy fold; everything else takes the vmapped path.
+    Adapter over the MiningPlan spine (plan.py): the (level, cap-class,
+    batch-class, engine, knobs) bucket maps to ONE cached AOT executable,
+    so ragged shapes compile O(#buckets) times. ``build_cap`` is the width
+    the index was built at when the caller pre-padded the table to a
+    capacity class (default: the table's width). Counting goes through
+    :func:`count_batch_dispatch`: engines exposing the natively-counting
+    ``count_batch`` protocol method run tracking + compaction + greedy
+    scheduling in ONE kernel launch per (level, batch).
     """
-    cap = table.shape[1]
-    index_overflow = jnp.any(counts > cap)
-    eng = tracking.get_engine(engine)
-    bn, bp, wt, chunk = _resolve_tiles(
-        eng, symbols.shape[1] - 1, cap, symbols.shape[0],
-        block_next, block_prev, window_tiles)
-    cfg = tracking.EngineConfig(
-        cap_occ=cap_occ, max_window=max_window, block_next=bn,
-        block_prev=bp, window_tiles=wt, chunk=chunk, interpret=interpret)
-    batch_counts, _, n_superset, overflow = count_batch_dispatch(
-        eng, table[symbols], t_low, t_high,
-        *_fresh_carries(symbols.shape[0]), cfg,
-        parallel_schedule=parallel_schedule)
-    return batch_counts, n_superset, overflow | index_overflow
+    table = jnp.asarray(table, jnp.float32)
+    counts = jnp.asarray(counts, jnp.int32)
+    symbols = jnp.asarray(symbols, jnp.int32)
+    t_low = jnp.asarray(t_low, jnp.float32)
+    t_high = jnp.asarray(t_high, jnp.float32)
+    if build_cap is None:
+        build_cap = table.shape[1]
+    b, n = symbols.shape
+    if b == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return z, z, jnp.zeros((0,), bool)
+    p = plan_mod.plan_for(
+        "count_indexed", level=n, n_types=table.shape[0],
+        cap=table.shape[1], batch=b,
+        **_plan_knobs(engine, parallel_schedule, cap_occ, max_window,
+                      block_next, block_prev, window_tiles, interpret))
+    out = plan_mod.dispatch(
+        p, plan_mod.pad_width(table, p.cap, jnp.inf), counts,
+        jnp.asarray(build_cap, jnp.int32),
+        plan_mod.pad_rows(symbols, p.batch),
+        plan_mod.pad_rows(t_low, p.batch), plan_mod.pad_rows(t_high, p.batch))
+    return tuple(a[:b] for a in out)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("engine", "cap_occ", "max_window", "parallel_schedule",
-                     "block_next", "block_prev", "window_tiles", "interpret"),
-)
 def count_batch_indexed_stateful(
     table: jax.Array,       # f32[n_types, cap] per-type time index
     counts: jax.Array,      # i32[n_types] true per-type totals (pre-clip)
@@ -304,6 +470,7 @@ def count_batch_indexed_stateful(
     block_prev: Optional[int] = None,
     window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
+    build_cap: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """:func:`count_batch_indexed` that threads the greedy chain state.
 
@@ -316,27 +483,34 @@ def count_batch_indexed_stateful(
 
     Returns ``(counts[B], prev_end[B], n_superset[B], overflow[B])``.
     """
-    cap = table.shape[1]
-    index_overflow = jnp.any(counts > cap)
-    eng = tracking.get_engine(engine)
-    bn, bp, wt, chunk = _resolve_tiles(
-        eng, symbols.shape[1] - 1, cap, symbols.shape[0],
-        block_next, block_prev, window_tiles)
-    cfg = tracking.EngineConfig(
-        cap_occ=cap_occ, max_window=max_window, block_next=bn,
-        block_prev=bp, window_tiles=wt, chunk=chunk, interpret=interpret)
-    count_out, end_out, n_superset, overflow = count_batch_dispatch(
-        eng, table[symbols], t_low, t_high, prev_end, prev_count, cfg,
-        parallel_schedule=parallel_schedule)
-    return count_out, end_out, n_superset, overflow | index_overflow
+    table = jnp.asarray(table, jnp.float32)
+    counts = jnp.asarray(counts, jnp.int32)
+    symbols = jnp.asarray(symbols, jnp.int32)
+    t_low = jnp.asarray(t_low, jnp.float32)
+    t_high = jnp.asarray(t_high, jnp.float32)
+    prev_end = jnp.asarray(prev_end, jnp.float32)
+    prev_count = jnp.asarray(prev_count, jnp.int32)
+    if build_cap is None:
+        build_cap = table.shape[1]
+    b, n = symbols.shape
+    if b == 0:
+        zi = jnp.zeros((0,), jnp.int32)
+        return zi, jnp.zeros((0,), jnp.float32), zi, jnp.zeros((0,), bool)
+    p = plan_mod.plan_for(
+        "count_stateful", level=n, n_types=table.shape[0],
+        cap=table.shape[1], batch=b,
+        **_plan_knobs(engine, parallel_schedule, cap_occ, max_window,
+                      block_next, block_prev, window_tiles, interpret))
+    out = plan_mod.dispatch(
+        p, plan_mod.pad_width(table, p.cap, jnp.inf), counts,
+        jnp.asarray(build_cap, jnp.int32),
+        plan_mod.pad_rows(symbols, p.batch),
+        plan_mod.pad_rows(t_low, p.batch), plan_mod.pad_rows(t_high, p.batch),
+        plan_mod.pad_rows(prev_end, p.batch),
+        plan_mod.pad_rows(prev_count, p.batch))
+    return tuple(a[:b] for a in out)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("tail_cap", "engine", "cap_occ", "max_window",
-                     "parallel_schedule", "block_next", "block_prev",
-                     "window_tiles", "interpret"),
-)
 def count_tail_batch_indexed(
     table: jax.Array,       # f32[n_types, cap] per-type time index (updated)
     counts: jax.Array,      # i32[n_types] per-type totals incl. the new chunk
@@ -357,6 +531,7 @@ def count_tail_batch_indexed(
     block_prev: Optional[int] = None,
     window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
+    build_cap: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Tail-delta recount: only what one appended chunk can change.
 
@@ -370,49 +545,46 @@ def count_tail_batch_indexed(
     time belongs to the already-cached history, not the delta) — tracks it
     with any registered engine, and folds the resulting intervals onto the
     carried greedy state. Work is O(B * N * tail_cap * log tail_cap),
-    independent of the indexed stream length.
+    independent of the indexed stream length. ``tail_cap`` is semantic (it
+    bounds ``tail_short``), so the plan bucket keeps it exact — the
+    streaming miner already sizes it in capacity classes.
 
     Returns ``(counts[B], prev_end[B], n_superset[B], overflow[B],
     tail_short[B])``; ``tail_short`` flags a view too narrow for some
     symbol's suffix (the caller re-runs with a wider ``tail_cap`` — flagged,
     never silently wrong, same convention as every other capacity miss).
     """
-    cap = table.shape[1]
-    t_tail_start = jnp.asarray(t_tail_start, jnp.float32)
-    # per-type suffix offset: first indexed event at/after the cutoff (one
-    # searchsorted over the [n_types, cap] table, not per candidate row)
-    suffix_start = jax.vmap(
-        lambda row: jnp.searchsorted(row, t_tail_start, side="left"))(
-        table).astype(jnp.int32)                       # [n_types]
-    starts = suffix_start[symbols]                     # [B, N]
-    starts = starts.at[:, -1].set(old_counts[symbols[:, -1]])
-    needed = jnp.minimum(counts, cap)[symbols] - starts
-    tail_short = jnp.any(needed > tail_cap, axis=-1)   # [B]
-    idx = starts[:, :, None] + jnp.arange(tail_cap, dtype=jnp.int32)
-    view = table[symbols[:, :, None], jnp.minimum(idx, cap - 1)]
-    view = jnp.where(idx < cap, view, jnp.inf)         # [B, N, tail_cap]
+    table = jnp.asarray(table, jnp.float32)
+    counts = jnp.asarray(counts, jnp.int32)
+    old_counts = jnp.asarray(old_counts, jnp.int32)
+    symbols = jnp.asarray(symbols, jnp.int32)
+    t_low = jnp.asarray(t_low, jnp.float32)
+    t_high = jnp.asarray(t_high, jnp.float32)
+    prev_end = jnp.asarray(prev_end, jnp.float32)
+    prev_count = jnp.asarray(prev_count, jnp.int32)
+    if build_cap is None:
+        build_cap = table.shape[1]
+    b, n = symbols.shape
+    if b == 0:
+        zi = jnp.zeros((0,), jnp.int32)
+        zb = jnp.zeros((0,), bool)
+        return zi, jnp.zeros((0,), jnp.float32), zi, zb, zb
+    p = plan_mod.plan_for(
+        "count_tail", level=n, n_types=table.shape[0], cap=table.shape[1],
+        batch=b, tail_cap=int(tail_cap),
+        **_plan_knobs(engine, parallel_schedule, cap_occ, max_window,
+                      block_next, block_prev, window_tiles, interpret))
+    out = plan_mod.dispatch(
+        p, plan_mod.pad_width(table, p.cap, jnp.inf), counts, old_counts,
+        jnp.asarray(build_cap, jnp.int32),
+        jnp.asarray(t_tail_start, jnp.float32),
+        plan_mod.pad_rows(symbols, p.batch),
+        plan_mod.pad_rows(t_low, p.batch), plan_mod.pad_rows(t_high, p.batch),
+        plan_mod.pad_rows(prev_end, p.batch),
+        plan_mod.pad_rows(prev_count, p.batch))
+    return tuple(a[:b] for a in out)
 
-    index_overflow = jnp.any(counts > cap)
-    eng = tracking.get_engine(engine)
-    bn, bp, wt, chunk = _resolve_tiles(
-        eng, symbols.shape[1] - 1, tail_cap, symbols.shape[0],
-        block_next, block_prev, window_tiles)
-    cfg = tracking.EngineConfig(
-        cap_occ=cap_occ, max_window=max_window, block_next=bn,
-        block_prev=bp, window_tiles=wt, chunk=chunk, interpret=interpret,
-        t_min=t_tail_start)
-    count_out, end_out, n_superset, overflow = count_batch_dispatch(
-        eng, view, t_low, t_high, prev_end, prev_count, cfg,
-        parallel_schedule=parallel_schedule)
-    return (count_out, end_out, n_superset,
-            overflow | index_overflow, tail_short)
 
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("engine", "cap_occ", "max_window", "parallel_schedule",
-                     "block_next", "block_prev", "window_tiles", "interpret"),
-)
 def count_corpus_indexed(
     tables: jax.Array,      # f32[S, n_types, cap] per-stream type indexes
     counts: jax.Array,      # i32[S, n_types] true per-type totals (pre-clip)
@@ -429,6 +601,7 @@ def count_corpus_indexed(
     block_prev: Optional[int] = None,
     window_tiles: Optional[int] = None,
     interpret: Optional[bool] = None,
+    build_cap: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Count one candidate batch against a whole corpus of streams at once.
 
@@ -440,47 +613,57 @@ def count_corpus_indexed(
     device against its own threshold — the corpus miner fetches (counts,
     keep, overflow) for all streams in a single per-level host sync.
 
+    Adapter over the MiningPlan spine: the stream axis rounds to its own
+    capacity class (padded streams are all-+inf — they track nothing and
+    their rows are sliced away), so corpora of nearby sizes share one
+    executable.
+
     Returns ``(counts i32[S, B], keep bool[S, B], n_superset i32[S, B],
     overflow bool[S, B])``. Per-row results are bit-for-bit what
     :func:`count_batch_indexed` returns for that stream alone — tracking,
     scheduling, and overflow math are per-(stream, episode)-row, so batch
     composition cannot perturb them (differentially tested).
     """
-    cap = tables.shape[2]
+    tables = jnp.asarray(tables, jnp.float32)
+    counts = jnp.asarray(counts, jnp.int32)
+    symbols = jnp.asarray(symbols, jnp.int32)
+    t_low = jnp.asarray(t_low, jnp.float32)
+    t_high = jnp.asarray(t_high, jnp.float32)
+    thresholds = jnp.asarray(thresholds, jnp.int32)
+    if thresholds.shape[0] != tables.shape[0]:
+        raise ValueError(
+            f"thresholds must have shape ({tables.shape[0]},), got "
+            f"{thresholds.shape}")
+    if build_cap is None:
+        build_cap = tables.shape[2]
     s, b = tables.shape[0], symbols.shape[0]
-    index_overflow = jnp.any(counts > cap, axis=-1)         # [S]
-    eng = tracking.get_engine(engine)
-    bn, bp, wt, chunk = _resolve_tiles(
-        eng, symbols.shape[1] - 1, cap, s * b,
-        block_next, block_prev, window_tiles)
-    cfg = tracking.EngineConfig(
-        cap_occ=cap_occ, max_window=max_window, block_next=bn,
-        block_prev=bp, window_tiles=wt, chunk=chunk, interpret=interpret)
-    if getattr(eng, "count_batch", None) is not None:
-        # corpus-native counting: (stream, episode) rows fold into ONE
-        # single-launch count pipeline call — fresh carries, stateless
-        corpus_counts, _, n_superset, overflow = count_batch_dispatch(
-            eng, tables[:, symbols],
-            jnp.broadcast_to(t_low[None], (s,) + t_low.shape),
-            jnp.broadcast_to(t_high[None], (s,) + t_high.shape),
-            jnp.full((s, b), -jnp.inf, jnp.float32),
-            jnp.zeros((s, b), jnp.int32), cfg,
-            parallel_schedule=parallel_schedule)
-    else:
-        occ = tracking.track_corpus_dispatch(
-            eng, tables[:, symbols], t_low, t_high, cfg)
-
-        def schedule(starts, ends, valid):
-            one = tracking.Occurrences(
-                starts, ends, valid, jnp.int32(0), jnp.bool_(False))
-            return scheduling.greedy_count(one, parallel=parallel_schedule)
-
-        corpus_counts = jax.vmap(jax.vmap(schedule))(
-            occ.starts, occ.ends, occ.valid)
-        n_superset, overflow = occ.n_superset, occ.overflow
-    keep = corpus_counts >= thresholds.astype(jnp.int32)[:, None]
-    return (corpus_counts, keep, n_superset,
-            overflow | index_overflow[:, None])
+    if b == 0:
+        zi = jnp.zeros((s, 0), jnp.int32)
+        zb = jnp.zeros((s, 0), bool)
+        return zi, zb, zi, zb
+    p = plan_mod.plan_for(
+        "count_corpus", level=symbols.shape[1], n_types=tables.shape[1],
+        cap=tables.shape[2], batch=b, streams=s,
+        **_plan_knobs(engine, parallel_schedule, cap_occ, max_window,
+                      block_next, block_prev, window_tiles, interpret))
+    tables = plan_mod.pad_width(tables, p.cap, jnp.inf)
+    if p.streams != s:
+        # padded streams are empty (+inf index, zero counts, zero
+        # thresholds): they count nothing and their rows are sliced away
+        tables = jnp.concatenate(
+            [tables, jnp.full((p.streams - s,) + tables.shape[1:], jnp.inf,
+                              jnp.float32)], axis=0)
+        counts = jnp.concatenate(
+            [counts, jnp.zeros((p.streams - s, counts.shape[1]), jnp.int32)],
+            axis=0)
+        thresholds = jnp.concatenate(
+            [thresholds, jnp.zeros((p.streams - s,), jnp.int32)], axis=0)
+    out = plan_mod.dispatch(
+        p, tables, counts, jnp.asarray(build_cap, jnp.int32),
+        plan_mod.pad_rows(symbols, p.batch),
+        plan_mod.pad_rows(t_low, p.batch), plan_mod.pad_rows(t_high, p.batch),
+        thresholds)
+    return tuple(a[:s, :b] for a in out)
 
 
 @functools.partial(

@@ -318,7 +318,24 @@ def count_sharded_batch_indexed(
     ``n_superset`` is the number of owned final-level occurrence intervals
     summed over shards (the size of the merged superset fed to the greedy
     stitch).
+
+    Plan-spine integration (plan.py): a mesh plan is resolved for the
+    launch — same rounding rule, same tuned-tile bucket — but dispatch
+    stays on jax's own jit cache (``_count_sharded_batch_impl`` keys on
+    the identical static args a plan carries, and shard_map executables
+    cannot be AOT-held per-bucket the way single-device ones are). The
+    bypass is counted in ``plan.cache_stats()["bypasses"]`` so serving
+    telemetry still sees every launch.
     """
+    from . import plan as plan_mod
+    plan_mod.note_bypass(plan_mod.plan_for(
+        "count_indexed", level=int(symbols.shape[1]),
+        n_types=int(index.table.shape[-2]), cap=int(index.table.shape[-1]),
+        batch=int(symbols.shape[0]), engine=engine,
+        parallel_schedule=parallel_schedule, cap_occ=cap_occ,
+        max_window=max_window, block_next=block_next, block_prev=block_prev,
+        window_tiles=window_tiles, interpret=interpret, mesh=index.mesh,
+        kind="track"))
     return _count_sharded_batch_impl(
         index.table, index.type_counts, index.t_own_last, index.t_boundary,
         index.halo_end,

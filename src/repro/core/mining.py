@@ -39,10 +39,11 @@ from jax.sharding import Mesh
 
 from . import counting, distributed
 from . import events as events_lib
+from . import plan as plan_mod
 from .episodes import Episode, episode_batch, episodes_from_rows
 from .events import EventStream
 
-MAX_BATCH_PAD = 16  # pad candidate batches to multiples of this to limit recompiles
+MAX_BATCH_PAD = 16  # minimum candidate-batch capacity class (see _pad_to)
 
 
 @dataclasses.dataclass
@@ -94,8 +95,12 @@ class LevelArrays:
 
 
 def _pad_to(n: int) -> int:
-    return max(MAX_BATCH_PAD,
-               ((n + MAX_BATCH_PAD - 1) // MAX_BATCH_PAD) * MAX_BATCH_PAD)
+    """Candidate batches pad to capacity classes (pow2, floor 16) — the
+    same rounding rule the MiningPlan bucket and ``autotune.bucket_key``
+    use (plan.capacity_class), so a miner-padded batch always arrives at
+    the counting adapters already bucket-aligned: zero re-padding, and the
+    executable cache compiles O(#batch classes) times per level."""
+    return plan_mod.capacity_class(n, floor=MAX_BATCH_PAD)
 
 
 def _resolve_cap(cfg: MinerConfig, stream: EventStream) -> int:
@@ -298,6 +303,12 @@ def mine_arrays(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelArrays]
     cap = _resolve_cap(cfg, stream)
     table, type_counts = events_lib.type_index(
         stream.types, stream.times, stream.n_types, cap)   # built ONCE
+    # pad the index ONCE to its capacity class (+inf columns are inert):
+    # every level's counting call then lands exactly on its plan bucket —
+    # zero per-call padding, and streams of nearby lengths share one
+    # cached executable. build_cap keeps overflow semantics at the true
+    # build width (plan.py / DESIGN.md §11).
+    table = plan_mod.pad_width(table, plan_mod.capacity_class(cap), jnp.inf)
 
     # level 1: single-type episodes; count = per-type event count
     binc = np.asarray(type_counts)                          # level-1 host sync
@@ -309,7 +320,8 @@ def mine_arrays(stream: EventStream, cfg: MinerConfig) -> Dict[int, LevelArrays]
             engine=cfg.engine, cap_occ=cfg.cap_occ, max_window=cfg.max_window,
             parallel_schedule=cfg.parallel_schedule,
             block_next=cfg.block_next, block_prev=cfg.block_prev,
-            window_tiles=cfg.window_tiles, interpret=cfg.interpret)
+            window_tiles=cfg.window_tiles, interpret=cfg.interpret,
+            build_cap=cap)
         return counts_dev, [(_OVERFLOW_MSG, overflow)]
 
     return _mine_levels(

@@ -55,6 +55,7 @@ import numpy as np
 
 from . import counting
 from . import events as events_lib
+from . import plan as plan_mod
 from .events import EventStream
 from .mining import (_OVERFLOW_MSG, LevelArrays, MinerConfig, _prune_level,
                      generate_candidates_arrays, pad_candidate_rows)
@@ -63,10 +64,6 @@ _TAIL_SHORT_MSG = (
     "streaming tail view narrower than a symbol's span-bounded suffix; "
     "this is a StreamingMiner sizing bug (host and device suffix bounds "
     "disagree) — please report")
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(4, int(n - 1).bit_length()) if n > 1 else 16
 
 
 @dataclasses.dataclass
@@ -111,7 +108,11 @@ class StreamingMiner:
         self.growth = float(growth)
         if initial_cap is None:
             initial_cap = 256 if cfg.cap is None else cfg.cap
-        self.cap = max(1, initial_cap)
+        # snap to a capacity class (pow2): the index width is part of the
+        # MiningPlan bucket, so class-aligned widths make every counting
+        # dispatch land on an exact cached executable (plan.py) — the cap
+        # is a growth hint, never a limit, so rounding up is free
+        self.cap = plan_mod.capacity_class(max(1, initial_cap))
         self.table = jnp.full((self.n_types, self.cap), jnp.inf, jnp.float32)
         self.counts_dev = jnp.zeros((self.n_types,), jnp.int32)
         self.counts = np.zeros((self.n_types,), np.int64)  # exact host mirror
@@ -140,6 +141,22 @@ class StreamingMiner:
         """The accepted events so far, as a host-side EventStream."""
         return EventStream(self._all_types.copy(), self._all_times.copy(),
                            self.n_types)
+
+    def plans(self, *, batches=None, tail_caps=()):
+        """MiningPlans this miner will dispatch at its current capacity.
+
+        Feed the result to :func:`plan.warm` at serving startup so the
+        first live append pays zero compiles (DESIGN.md §11). ``tail_caps``
+        are the expected tail-view widths (capacity classes, floor 16 —
+        a feed's chunk size + event rate x span bounds them); the
+        cold-backfill and plain-indexed plans are always included.
+        """
+        return plan_mod.plans_for_miner(
+            dataclasses.replace(self.cfg, cap=self.cap),  # the LIVE width,
+            n_types=self.n_types, n_events=self.cap,      # not the cfg hint
+            batches=batches, streaming=True,
+            tail_caps=[plan_mod.capacity_class(int(t), floor=16)
+                       for t in tail_caps])
 
     @property
     def results(self) -> Dict[int, LevelArrays]:
@@ -172,6 +189,8 @@ class StreamingMiner:
             new_cap = self.cap
             while new_cap < needed:
                 new_cap = max(new_cap + 1, int(new_cap * self.growth))
+            # class-align the grown width (rounds up, so still >= needed)
+            new_cap = plan_mod.capacity_class(new_cap)
             self.table = events_lib.grow_type_index(self.table, new_cap)
             self.cap = new_cap
         self.table, self.counts_dev = events_lib.type_index_update(
@@ -207,7 +226,10 @@ class StreamingMiner:
         # exact host sizing of the widest per-type suffix
         i0 = int(np.searchsorted(self._all_times, t0, side="left"))
         suffix = np.bincount(self._all_types[i0:], minlength=self.n_types)
-        tail_cap = _next_pow2(int(suffix.max()))
+        # capacity-class sizing (floor 16): the tail view's width is part
+        # of the MiningPlan bucket, so steady-state feeds land on O(log)
+        # distinct tail plans — each compiled once, ever (plan.py)
+        tail_cap = plan_mod.capacity_class(int(suffix.max()), floor=16)
 
         self._results = self._mine_levels(
             t_tail_start=t0, tail_cap=tail_cap, old_counts_dev=old_counts_dev)

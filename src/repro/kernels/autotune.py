@@ -38,6 +38,11 @@ import os
 from typing import Dict, List, Optional
 
 from ..analysis import roofline
+# THE shared rounding rule: plan buckets and tuned-tile buckets round with
+# the same function (core/plan.py owns it), so a MiningPlan's capacity
+# classes and this module's bucket_key can never diverge — regression-tested
+# in tests/test_plan_cache.py against every checked-in tuned_configs entry.
+from ..core.plan import pow2_ceil
 
 _CONFIG_PATH = os.path.join(os.path.dirname(__file__), "tuned_configs.json")
 
@@ -69,16 +74,23 @@ DEFAULTS: Dict[str, TileConfig] = {
 }
 
 
-def _pow2_ceil(x: int) -> int:
-    return 1 << max(0, int(x) - 1).bit_length() if x > 0 else 1
+# back-compat alias: callers/tests that reached for the private name keep
+# working; the one definition lives in core/plan.py
+_pow2_ceil = pow2_ceil
 
 
 def bucket_key(kind: str, levels: int, cap: int, batch: int) -> str:
-    """Deterministic bucket id for a (kernel kind, L, N, B) problem shape."""
+    """Deterministic bucket id for a (kernel kind, L, N, B) problem shape.
+
+    Idempotent under the rounding rule: ``bucket_key(kind, L,
+    pow2_ceil(cap), pow2_ceil(batch)) == bucket_key(kind, L, cap, batch)``
+    — which is what lets ``plan_for`` round shapes *first* and still
+    resolve the same tuned tiles the raw shapes would.
+    """
     if kind not in DEFAULTS:
         raise ValueError(
             f"unknown kernel kind {kind!r}; expected one of {sorted(DEFAULTS)}")
-    return f"{kind}:L{int(levels)}:N{_pow2_ceil(cap)}:B{_pow2_ceil(batch)}"
+    return f"{kind}:L{int(levels)}:N{pow2_ceil(cap)}:B{pow2_ceil(batch)}"
 
 
 @functools.lru_cache(maxsize=None)
