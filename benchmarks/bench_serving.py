@@ -1,0 +1,191 @@
+"""Multi-tenant serving throughput: pooled sessions vs per-session miners.
+
+The workload is the serving loop ``core.serving`` exists for: ``S``
+concurrent sessions, each appending a chunk per round, with every
+session's full-stream mining result needed after every round. The
+baseline is the pre-serving architecture — a Python loop of standalone
+``StreamingMiner``s, paying the per-dispatch overhead and the per-level
+host sync ``S`` times per round — while ``MiningSessionServer`` absorbs
+all ``S`` appends in ONE batched level loop (a fixed number of
+dispatches and host syncs per round, regardless of ``S``).
+
+Both paths are warmed before timing, the pool's capacity classes are
+pinned so nothing grows mid-measurement, and the serving path must run
+the timed rounds with ZERO plan-cache misses (the ``warm()`` protocol's
+contract — asserted, not reported). The headline cell (``dense`` engine,
+``S`` >= 1k sessions) must show >= 5x session throughput over the loop
+and the harness enforces it: a shortfall raises, it does not hide in a
+CSV column.
+
+Emits the throughput (sessions/sec) and the p99 append-completion
+latency of both paths. For the pool, one round absorbs every append in
+one flush, so the round's wall time bounds EVERY append's completion
+latency that round: p99 is taken over per-round flush times. For the
+loop, each append completes individually: p99 is over per-append times.
+
+Writes ``BENCH_serving.json`` (``BENCH_serving.smoke.json`` under
+``REPRO_BENCH_SMOKE=1`` — CI must never clobber a checked-in baseline)
+and, when a checked-in ``BENCH_serving.json`` baseline exists, a
+``BENCH_serving.compare.json`` sidecar with per-metric ratios (the
+perf-trajectory artifact; the >=5x raise is the gate).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import MinerConfig, MiningSessionServer, StreamingMiner, plan
+
+from .common import emit
+
+N_TYPES = 8
+SPEEDUP_TARGET = 5.0
+HEADLINE_ENGINE = "dense"
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("REPRO_BENCH_SMOKE"))
+
+
+def _feeds(seed: int, n_sessions: int, n_rounds: int, chunk: int):
+    """Per-session chunk sequences (independent arrival processes)."""
+    rng = np.random.default_rng(seed)
+    feeds = []
+    for _ in range(n_sessions):
+        times = np.cumsum(rng.exponential(0.25, n_rounds * chunk))
+        types = rng.integers(0, N_TYPES, n_rounds * chunk).astype(np.int32)
+        feeds.append([(types[r * chunk:(r + 1) * chunk],
+                       times[r * chunk:(r + 1) * chunk].astype(np.float32))
+                      for r in range(n_rounds)])
+    return feeds
+
+
+def _serve_round(srv, sids, feeds, r) -> float:
+    """One serving round: queue every session's chunk, one batched flush.
+    Returns the round's wall time in us — an upper bound on every queued
+    append's completion latency."""
+    t0 = time.perf_counter()
+    for sid, feed in zip(sids, feeds):
+        srv.append(sid, *feed[r])
+    srv.flush()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def _loop_round(miners, feeds, r) -> list:
+    """One baseline round: each session's miner appends (and mines)
+    individually. Returns per-append completion times in us."""
+    out = []
+    for m, feed in zip(miners, feeds):
+        t0 = time.perf_counter()
+        m.append(*feed[r])
+        out.append((time.perf_counter() - t0) * 1e6)
+    return out
+
+
+def run() -> None:
+    smoke = _smoke()
+    n_sessions = 48 if smoke else 1024
+    chunk = 16 if smoke else 24
+    warm_rounds = 1
+    timed_rounds = 2 if smoke else 3
+    n_rounds = warm_rounds + timed_rounds
+    engine = HEADLINE_ENGINE
+    target = 2.0 if smoke else SPEEDUP_TARGET
+    # threshold scaled to keep the frequent frontier small; max_candidates
+    # pinned to one batch class so every level's dispatch chunks land in
+    # the {16,32,64} classes the warm() call below enumerates (the serving
+    # protocol: an operator bounds the candidate valve, then warms exactly
+    # the classes traffic can reach) — the loop baseline runs the same
+    # valve, so the comparison stays like-for-like
+    threshold = max(4, (n_rounds * chunk) // (2 * N_TYPES))
+    cap = n_rounds * chunk   # worst case: every event one type
+    cfg = MinerConfig(t_low=0.05, t_high=1.0, threshold=threshold,
+                      max_level=3, engine=engine, cap=cap,
+                      max_candidates=N_TYPES * N_TYPES)
+    feeds = _feeds(0, n_sessions, n_rounds, chunk)
+
+    # -- pooled serving path ------------------------------------------------
+    srv = MiningSessionServer(N_TYPES, cfg, max_sessions=n_sessions,
+                              initial_cap=cap)
+    # batch classes up to the max_candidates valve; tail classes up to the
+    # span-bounded suffix (chunk arrivals x the (t_low, t_high] window)
+    srv.warm(batches=[16, 32, 64], tail_caps=[16, 32, 64])
+    sids = [srv.create_session() for _ in range(n_sessions)]
+    for r in range(warm_rounds):
+        _serve_round(srv, sids, feeds, r)
+    misses_before = plan.cache_stats()["misses"]
+    serve_times = [_serve_round(srv, sids, feeds, r)
+                   for r in range(warm_rounds, n_rounds)]
+    misses = plan.cache_stats()["misses"] - misses_before
+    # the warm() contract, asserted where it matters: live traffic on a
+    # warmed, capacity-pinned pool never misses the plan cache
+    if misses:
+        raise RuntimeError(
+            f"serving timed rounds had {misses} plan-cache miss(es) after "
+            "warm() — a capacity class was not covered by the warm protocol")
+    serve_round_us = float(np.mean(serve_times))
+    serve_p99_us = float(np.percentile(serve_times, 99))
+    serve_rate = n_sessions / (serve_round_us / 1e6)
+
+    # -- per-session loop baseline -----------------------------------------
+    # every miner shares the same capacity classes, so the loop compiles
+    # once across all S miners (its best case), warmed on the first round
+    miners = [StreamingMiner(N_TYPES, cfg, initial_cap=cap)
+              for _ in range(n_sessions)]
+    for r in range(warm_rounds):
+        _loop_round(miners, feeds, r)
+    loop_samples = []
+    for r in range(warm_rounds, n_rounds):
+        loop_samples.extend(_loop_round(miners, feeds, r))
+    loop_round_us = float(np.mean(loop_samples)) * n_sessions
+    loop_p99_us = float(np.percentile(loop_samples, 99))
+    loop_rate = n_sessions / (loop_round_us / 1e6)
+
+    speedup = loop_round_us / max(serve_round_us, 1e-9)
+    tag = f"S={n_sessions} chunk={chunk}/round"
+    emit(f"serving_loop_{engine}", loop_round_us,
+         f"{tag} {loop_rate:.0f} sessions/sec p99={loop_p99_us:.0f}us")
+    emit(f"serving_pool_{engine}", serve_round_us,
+         f"{tag} {serve_rate:.0f} sessions/sec p99={serve_p99_us:.0f}us "
+         f"speedup={speedup:.1f}x")
+    verdict = "PASS" if speedup >= target else "FAIL"
+    emit("serving_headline_speedup", serve_round_us,
+         f"{speedup:.1f}x vs per-session loop ({engine}, S={n_sessions}, "
+         f"target >={target:.0f}x: {verdict})")
+
+    entries = [{
+        "engine": engine, "sessions": n_sessions, "chunk": chunk,
+        "timed_rounds": timed_rounds,
+        "serve_round_us": serve_round_us, "serve_p99_us": serve_p99_us,
+        "serve_sessions_per_sec": serve_rate,
+        "loop_round_us": loop_round_us, "loop_p99_us": loop_p99_us,
+        "loop_sessions_per_sec": loop_rate, "speedup": speedup,
+    }]
+    import jax
+    out = pathlib.Path("BENCH_serving.smoke.json" if smoke
+                       else "BENCH_serving.json")
+    out.write_text(json.dumps(
+        {"backend": jax.default_backend(), "suite": "serving",
+         "entries": entries}, indent=2) + "\n")
+    emit("serving_json_written", 0.0, str(out))
+    baseline_path = pathlib.Path("BENCH_serving.json")
+    if smoke and baseline_path.exists():
+        base = json.loads(baseline_path.read_text())["entries"][0]
+        pathlib.Path("BENCH_serving.compare.json").write_text(json.dumps(
+            {"suite": "serving", "baseline": base, "new": entries[0],
+             "note": "smoke shapes differ from the checked-in full sweep; "
+                     "ratios are trajectory signal, not a gate",
+             "speedup_ratio": entries[0]["speedup"] / max(
+                 base["speedup"], 1e-9)}, indent=2) + "\n")
+        emit("serving_compare_written", 0.0, "BENCH_serving.compare.json")
+
+    if speedup < target:
+        # a real gate, not a CSV line someone has to read: the harness
+        # turns this into a nonzero exit
+        raise RuntimeError(
+            f"serving headline speedup {speedup:.1f}x is below the "
+            f">={target:.0f}x target (engine {engine}, S={n_sessions})")

@@ -267,8 +267,9 @@ def run_autotune(top_k: int = 3, out_path: str | None = None) -> int:
     return 0
 
 
-SUITE_NAMES = ("counting", "mining", "corpus", "streaming", "episode_length",
-               "frequency", "instruction_mix", "distributed", "compile")
+SUITE_NAMES = ("counting", "mining", "corpus", "streaming", "serving",
+               "episode_length", "frequency", "instruction_mix",
+               "distributed", "compile")
 
 
 def unknown_suites(chosen) -> list:
@@ -318,12 +319,14 @@ def main() -> None:
                  f"valid suites: {', '.join(SUITE_NAMES)}")
     from . import (bench_compile, bench_corpus, bench_counting,
                    bench_distributed, bench_episode_length, bench_frequency,
-                   bench_instruction_mix, bench_mining, bench_streaming)
+                   bench_instruction_mix, bench_mining, bench_serving,
+                   bench_streaming)
     suites = {
         "counting": bench_counting.run,            # paper Figs 9-10 + engine sweep
         "mining": bench_mining.run,                # device-resident miner e2e
         "corpus": bench_corpus.run,                # multi-stream batched miner
         "streaming": bench_streaming.run,          # incremental append vs remine
+        "serving": bench_serving.run,              # session pool vs miner loop
         "episode_length": bench_episode_length.run,  # paper Fig 11
         "frequency": bench_frequency.run,          # paper Fig 12
         "instruction_mix": bench_instruction_mix.run,  # paper Table III

@@ -4,9 +4,10 @@
 """
 import numpy as np
 
-from repro.core import (EventStream, MinerConfig, cache_stats,
-                        count_fsm_numpy, count_nonoverlapped, mine,
-                        plans_for_miner, serial, warm)
+from repro.core import (EventStream, MinerConfig, MiningSessionServer,
+                        StreamingMiner, cache_stats, count_fsm_numpy,
+                        count_nonoverlapped, mine, plans_for_miner, serial,
+                        warm)
 
 
 def main():
@@ -59,6 +60,27 @@ def main():
     print(f"plan cache: {stats['hits']} hit(s), {stats['misses']} miss(es) "
           "after warm (0 misses = every level ran a preloaded executable)")
     print("OK: embedded cascade 0->1->2 discovered")
+
+    # 3) Multi-tenant serving (DESIGN.md §12): many live sessions, each an
+    # incrementally-growing stream, mined in ONE batched pool pass per
+    # flush. Each session's result is bit-for-bit a standalone
+    # StreamingMiner fed the same chunks.
+    srv = MiningSessionServer(n_types, cfg, max_sessions=4, initial_cap=256)
+    srv.warm()                     # serving startup: preload every bucket
+    half = stream.n_events // 2
+    sessions = [srv.create_session() for _ in range(3)]
+    for sid in sessions:           # first chunk for every session...
+        srv.append(sid, stream.types[:half], stream.times[:half])
+    srv.flush()                    # ...absorbed in one batched level loop
+    for sid in sessions:           # streams keep growing
+        srv.append(sid, stream.types[half:], stream.times[half:])
+    got = srv.results(sessions[0])  # reads flush all pending sessions
+    solo = StreamingMiner(n_types, cfg, initial_cap=256)
+    solo.append(stream.types[:half], stream.times[:half])
+    ref = solo.append(stream.types[half:], stream.times[half:])
+    assert all(np.array_equal(got[lv].counts, ref[lv].counts) for lv in ref)
+    print(f"serving pool: {len(sessions)} sessions mined per flush, "
+          "each == its standalone StreamingMiner")
 
 
 if __name__ == "__main__":

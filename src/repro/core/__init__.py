@@ -3,17 +3,20 @@
 # (TPU/XLA) execution. See DESIGN.md for the GPU->TPU mapping.
 from .episodes import Episode, serial, episode_batch, episodes_from_rows
 from .events import (EventStream, from_arrays, type_index, type_index_batch,
-                     type_index_update, grow_type_index, episode_symbol_times)
+                     type_index_update, type_index_update_batch,
+                     grow_type_index, episode_symbol_times)
 from .counting import (CountResult, count_batch, count_batch_indexed,
                        count_batch_indexed_stateful, count_corpus_indexed,
+                       count_corpus_tail_grouped, count_corpus_tail_indexed,
                        count_nonoverlapped, count_occurrences,
                        count_tail_batch_indexed)
 from .mining import (MinerConfig, LevelResult, LevelArrays, mine, mine_arrays,
                      mine_sharded, generate_candidates,
                      generate_candidates_arrays)
 from .corpus import (CorpusResult, aggregate_min_streams, mine_corpus,
-                     pad_corpus)
-from .streaming import StreamingMiner
+                     pad_corpus, union_candidates)
+from .streaming import StreamingMiner, clean_chunk, suffix_cutoff
+from .serving import MiningSessionServer, StreamingCorpusMiner
 from .plan import (MiningPlan, plan_for, warm, cache_stats, cached_plans,
                    cache_disabled, plans_for_miner, capacity_class, pow2_ceil)
 from .tracking import (TrackingEngine, EngineConfig, register_engine,
@@ -38,14 +41,18 @@ def __getattr__(name):
 __all__ = [
     "Episode", "serial", "episode_batch", "episodes_from_rows",
     "EventStream", "from_arrays", "type_index", "type_index_batch",
-    "type_index_update", "grow_type_index", "episode_symbol_times",
+    "type_index_update", "type_index_update_batch", "grow_type_index",
+    "episode_symbol_times",
     "CountResult", "count_batch", "count_batch_indexed",
     "count_batch_indexed_stateful", "count_corpus_indexed",
+    "count_corpus_tail_grouped", "count_corpus_tail_indexed",
     "count_nonoverlapped", "count_occurrences", "count_tail_batch_indexed",
-    "StreamingMiner", "ENGINES",
+    "StreamingMiner", "clean_chunk", "suffix_cutoff",
+    "MiningSessionServer", "StreamingCorpusMiner", "ENGINES",
     "MinerConfig", "LevelResult", "LevelArrays", "mine", "mine_arrays",
     "mine_sharded", "generate_candidates", "generate_candidates_arrays",
     "CorpusResult", "aggregate_min_streams", "mine_corpus", "pad_corpus",
+    "union_candidates",
     "CorpusIndex", "build_corpus_index", "count_corpus_sharded_indexed",
     "TrackingEngine", "EngineConfig", "register_engine", "get_engine",
     "engine_names",

@@ -107,6 +107,22 @@ def _level_thresholds(
     return thresholds
 
 
+def union_candidates(frontiers: Sequence[np.ndarray]):
+    """Dedup per-stream candidate frontiers into one union batch.
+
+    ``frontiers`` are same-width ``i32[b_i, N]`` row blocks (one per
+    running stream/session, in read-back order). Returns ``(union
+    i32[U, N], inverse i32[sum b_i])`` where block ``i``'s rows map to
+    ``union[inverse[offset_i : offset_i + b_i]]`` — each caller reads its
+    own candidates' rows back out of the one counted union (the
+    un-union convention shared by :func:`mine_corpus` and the serving
+    session pool).
+    """
+    stacked = np.concatenate(list(frontiers), axis=0)
+    union, inverse = np.unique(stacked, axis=0, return_inverse=True)
+    return union.astype(np.int32), inverse.reshape(-1)
+
+
 def aggregate_min_streams(
     per_stream: Sequence[Dict[int, LevelArrays]], min_streams: int
 ) -> Dict[int, LevelArrays]:
@@ -262,9 +278,7 @@ def mine_corpus(
         # for the [S, chunk, N, cap] gather stays what a single stream's
         # worst-case level costs. All chunks' results are fetched in one
         # device_get — still exactly ONE host sync per level.
-        stacked = np.concatenate(list(joined.values()), axis=0)
-        union, inverse = np.unique(stacked, axis=0, return_inverse=True)
-        inverse = inverse.reshape(-1)
+        union, inverse = union_candidates(list(joined.values()))
         n_union = union.shape[0]
         thr = _level_thresholds(thr_base, level, cfg)
         chunk = max(cfg.max_candidates, 1)

@@ -341,6 +341,90 @@ def _build_count_corpus(p: plan_mod.MiningPlan):
     return fn
 
 
+def _build_count_corpus_tail(p: plan_mod.MiningPlan):
+    tail_cap = p.tail_cap
+
+    def fn(tables, counts, old_counts, build_cap, t_tail_start,
+           symbols, t_low, t_high, prev_end, prev_count):
+        plan_mod.note_trace(p)
+        cap = tables.shape[2]
+        s, b = tables.shape[0], symbols.shape[0]
+        t_tail_start = jnp.asarray(t_tail_start, jnp.float32)
+        # per-(session, type) suffix offset: each session's own cutoff over
+        # its own table rows (one nested searchsorted over [S, n_types, cap])
+        suffix_start = jax.vmap(
+            lambda tbl, t0: jax.vmap(
+                lambda row: jnp.searchsorted(row, t0, side="left"))(tbl))(
+            tables, t_tail_start).astype(jnp.int32)        # [S, n_types]
+        starts = suffix_start[:, symbols]                  # [S, B, N]
+        starts = starts.at[:, :, -1].set(old_counts[:, symbols[:, -1]])
+        needed = jnp.minimum(counts, build_cap)[:, symbols] - starts
+        tail_short = jnp.any(needed > tail_cap, axis=-1)   # [S, B]
+        idx = starts[..., None] + jnp.arange(tail_cap, dtype=jnp.int32)
+        stream_ix = jnp.arange(s, dtype=jnp.int32)[:, None, None, None]
+        view = tables[stream_ix, symbols[None, :, :, None],
+                      jnp.minimum(idx, cap - 1)]
+        view = jnp.where(idx < cap, view, jnp.inf)     # [S, B, N, tail_cap]
+        # no t_min here: each session's seed row already starts at its own
+        # suffix_start, so the scalar seed restriction count_tail threads
+        # through EngineConfig is a provable no-op on this view (the shift
+        # restrict_seed_row computes is 0 for every row) — and a per-session
+        # t_min could not ride a single EngineConfig scalar anyway
+        index_overflow = jnp.any(counts > build_cap, axis=-1)   # [S]
+        count_out, end_out, n_superset, overflow = count_batch_dispatch(
+            tracking.get_engine(p.engine), view,
+            jnp.broadcast_to(t_low[None], (s,) + t_low.shape),
+            jnp.broadcast_to(t_high[None], (s,) + t_high.shape),
+            prev_end, prev_count, _engine_cfg(p),
+            parallel_schedule=p.parallel_schedule)
+        return (count_out, end_out, n_superset,
+                overflow | index_overflow[:, None], tail_short)
+    return fn
+
+
+def _build_count_corpus_tail_grouped(p: plan_mod.MiningPlan):
+    tail_cap = p.tail_cap
+
+    def fn(tables, counts, old_counts, build_cap, t_tail_start,
+           symbols, t_low, t_high, prev_end, prev_count):
+        plan_mod.note_trace(p)
+        cap = tables.shape[2]
+        s = tables.shape[0]
+        t_tail_start = jnp.asarray(t_tail_start, jnp.float32)
+        suffix_start = jax.vmap(
+            lambda tbl, t0: jax.vmap(
+                lambda row: jnp.searchsorted(row, t0, side="left"))(tbl))(
+            tables, t_tail_start).astype(jnp.int32)        # [S, n_types]
+        # symbols are per-session here ([S, B, N], each session its own
+        # candidate rows) so every gather pairs session s with ITS symbols
+        starts = jax.vmap(lambda ss, sym: ss[sym])(
+            suffix_start, symbols)                         # [S, B, N]
+        starts = starts.at[:, :, -1].set(
+            jax.vmap(lambda oc, last: oc[last])(old_counts, symbols[:, :, -1]))
+        totals = jax.vmap(lambda c, sym: c[sym])(
+            jnp.minimum(counts, build_cap), symbols)       # [S, B, N]
+        needed = totals - starts
+        tail_short = jnp.any(needed > tail_cap, axis=-1)   # [S, B]
+        idx = starts[..., None] + jnp.arange(tail_cap, dtype=jnp.int32)
+        stream_ix = jnp.arange(s, dtype=jnp.int32)[:, None, None, None]
+        view = tables[stream_ix, symbols[..., None],
+                      jnp.minimum(idx, cap - 1)]
+        view = jnp.where(idx < cap, view, jnp.inf)     # [S, B, N, tail_cap]
+        # same no-t_min argument as count_corpus_tail: each row's seed view
+        # already begins at its own suffix_start, so seed restriction is a
+        # provable no-op
+        index_overflow = jnp.any(counts > build_cap, axis=-1)   # [S]
+        count_out, end_out, n_superset, overflow = count_batch_dispatch(
+            tracking.get_engine(p.engine), view,
+            jnp.broadcast_to(t_low[None], (s,) + t_low.shape),
+            jnp.broadcast_to(t_high[None], (s,) + t_high.shape),
+            prev_end, prev_count, _engine_cfg(p),
+            parallel_schedule=p.parallel_schedule)
+        return (count_out, end_out, n_superset,
+                overflow | index_overflow[:, None], tail_short)
+    return fn
+
+
 def _specs_count_indexed(p):
     S, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
     return (S((p.n_types, p.cap), f32), S((p.n_types,), i32), S((), i32),
@@ -370,12 +454,37 @@ def _specs_count_corpus(p):
             S((p.batch, p.level - 1), f32), S((p.streams,), i32))
 
 
+def _specs_count_corpus_tail(p):
+    S, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
+    return (S((p.streams, p.n_types, p.cap), f32),
+            S((p.streams, p.n_types), i32), S((p.streams, p.n_types), i32),
+            S((), i32), S((p.streams,), f32),
+            S((p.batch, p.level), i32), S((p.batch, p.level - 1), f32),
+            S((p.batch, p.level - 1), f32), S((p.streams, p.batch), f32),
+            S((p.streams, p.batch), i32))
+
+
 plan_mod.register_fn("count_indexed", _build_count_indexed,
                      _specs_count_indexed)
 plan_mod.register_fn("count_stateful", _build_count_stateful,
                      _specs_count_stateful)
 plan_mod.register_fn("count_tail", _build_count_tail, _specs_count_tail)
 plan_mod.register_fn("count_corpus", _build_count_corpus, _specs_count_corpus)
+def _specs_count_corpus_tail_grouped(p):
+    S, f32, i32 = jax.ShapeDtypeStruct, jnp.float32, jnp.int32
+    return (S((p.streams, p.n_types, p.cap), f32),
+            S((p.streams, p.n_types), i32), S((p.streams, p.n_types), i32),
+            S((), i32), S((p.streams,), f32),
+            S((p.streams, p.batch, p.level), i32),
+            S((p.batch, p.level - 1), f32), S((p.batch, p.level - 1), f32),
+            S((p.streams, p.batch), f32), S((p.streams, p.batch), i32))
+
+
+plan_mod.register_fn("count_corpus_tail", _build_count_corpus_tail,
+                     _specs_count_corpus_tail)
+plan_mod.register_fn("count_corpus_tail_grouped",
+                     _build_count_corpus_tail_grouped,
+                     _specs_count_corpus_tail_grouped)
 
 
 # ---------------------------------------------------------------------------
@@ -663,6 +772,205 @@ def count_corpus_indexed(
         plan_mod.pad_rows(symbols, p.batch),
         plan_mod.pad_rows(t_low, p.batch), plan_mod.pad_rows(t_high, p.batch),
         thresholds)
+    return tuple(a[:s, :b] for a in out)
+
+
+def _pad_cols(arr: jax.Array, target: int) -> jax.Array:
+    """Pad axis 1 to ``target`` by repeating column 0 (the carry twin of
+    ``plan.pad_rows``: padded candidate rows repeat episode 0, so their
+    carries must repeat episode 0's carry — computed, then discarded)."""
+    b = arr.shape[1]
+    if b == target:
+        return jnp.asarray(arr)
+    reps = jnp.broadcast_to(jnp.asarray(arr)[:, :1],
+                            (arr.shape[0], target - b) + arr.shape[2:])
+    return jnp.concatenate([jnp.asarray(arr), reps], axis=1)
+
+
+def count_corpus_tail_indexed(
+    tables: jax.Array,       # f32[S, n_types, cap] per-session type indexes
+    counts: jax.Array,       # i32[S, n_types] totals incl. the new chunks
+    old_counts: jax.Array,   # i32[S, n_types] totals BEFORE the chunks
+    t_tail_start: jax.Array,  # f32[S] per-session suffix cutoffs
+    symbols: jax.Array,      # i32[B, N] shared (union) candidate batch
+    t_low: jax.Array,        # f32[B, N-1]
+    t_high: jax.Array,       # f32[B, N-1]
+    prev_end: jax.Array,     # f32[S, B] per-(session, episode) greedy carry
+    prev_count: jax.Array,   # i32[S, B]
+    *,
+    tail_cap: int,
+    engine: str = "dense",
+    cap_occ: Optional[int] = None,
+    max_window: int = 32,
+    parallel_schedule: bool = False,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    build_cap: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Tail-delta recount of one candidate batch against a session pool.
+
+    The serving miner's workhorse (:class:`serving.StreamingCorpusMiner`):
+    :func:`count_tail_batch_indexed` with the stream axis of
+    :func:`count_corpus_indexed` — each session's suffix view is cut at its
+    OWN ``t_tail_start`` / ``old_counts`` and folded onto its own carried
+    greedy state, but the whole ``S x B`` grid dispatches as ONE cached
+    executable (with a corpus-native engine, one kernel launch).
+
+    Two degenerate settings make this the only counting entry a serving
+    flush needs: ``t_tail_start = -inf`` + ``old_counts = 0`` +
+    ``tail_cap = cap`` turns a session's row into exactly the full
+    stateful backfill (`count_batch_indexed_stateful` semantics, carries
+    out), while finite cutoffs give the warm tail-delta recount. Per-row
+    results are bit-for-bit the single-stream entries' (differentially
+    tested) — tracking/scheduling/overflow are per-(session, episode)-row.
+
+    Returns ``(counts i32[S, B], prev_end f32[S, B], n_superset i32[S, B],
+    overflow bool[S, B], tail_short bool[S, B])``.
+    """
+    tables = jnp.asarray(tables, jnp.float32)
+    counts = jnp.asarray(counts, jnp.int32)
+    old_counts = jnp.asarray(old_counts, jnp.int32)
+    t_tail_start = jnp.asarray(t_tail_start, jnp.float32)
+    symbols = jnp.asarray(symbols, jnp.int32)
+    t_low = jnp.asarray(t_low, jnp.float32)
+    t_high = jnp.asarray(t_high, jnp.float32)
+    prev_end = jnp.asarray(prev_end, jnp.float32)
+    prev_count = jnp.asarray(prev_count, jnp.int32)
+    if build_cap is None:
+        build_cap = tables.shape[2]
+    s, b = tables.shape[0], symbols.shape[0]
+    if b == 0:
+        zi = jnp.zeros((s, 0), jnp.int32)
+        zb = jnp.zeros((s, 0), bool)
+        return zi, jnp.zeros((s, 0), jnp.float32), zi, zb, zb
+    p = plan_mod.plan_for(
+        "count_corpus_tail", level=symbols.shape[1], n_types=tables.shape[1],
+        cap=tables.shape[2], batch=b, streams=s, tail_cap=int(tail_cap),
+        **_plan_knobs(engine, parallel_schedule, cap_occ, max_window,
+                      block_next, block_prev, window_tiles, interpret))
+    tables = plan_mod.pad_width(tables, p.cap, jnp.inf)
+    prev_end = _pad_cols(prev_end, p.batch)
+    prev_count = _pad_cols(prev_count, p.batch)
+    if p.streams != s:
+        # padded sessions are empty (+inf index, zero counts, -inf cutoff):
+        # they count nothing and their rows are sliced away
+        pad = p.streams - s
+        tables = jnp.concatenate(
+            [tables, jnp.full((pad,) + tables.shape[1:], jnp.inf,
+                              jnp.float32)], axis=0)
+        counts = jnp.concatenate(
+            [counts, jnp.zeros((pad, counts.shape[1]), jnp.int32)], axis=0)
+        old_counts = jnp.concatenate(
+            [old_counts, jnp.zeros((pad, old_counts.shape[1]), jnp.int32)],
+            axis=0)
+        t_tail_start = jnp.concatenate(
+            [t_tail_start, jnp.full((pad,), -jnp.inf, jnp.float32)], axis=0)
+        prev_end = jnp.concatenate(
+            [prev_end, jnp.full((pad, p.batch), -jnp.inf, jnp.float32)],
+            axis=0)
+        prev_count = jnp.concatenate(
+            [prev_count, jnp.zeros((pad, p.batch), jnp.int32)], axis=0)
+    out = plan_mod.dispatch(
+        p, tables, counts, old_counts, jnp.asarray(build_cap, jnp.int32),
+        t_tail_start, plan_mod.pad_rows(symbols, p.batch),
+        plan_mod.pad_rows(t_low, p.batch), plan_mod.pad_rows(t_high, p.batch),
+        prev_end, prev_count)
+    return tuple(a[:s, :b] for a in out)
+
+
+def count_corpus_tail_grouped(
+    tables: jax.Array,       # f32[S, n_types, cap] per-session type indexes
+    counts: jax.Array,       # i32[S, n_types] totals incl. the new chunks
+    old_counts: jax.Array,   # i32[S, n_types] totals BEFORE the chunks
+    t_tail_start: jax.Array,  # f32[S] per-session suffix cutoffs
+    symbols: jax.Array,      # i32[S, B, N] PER-SESSION candidate rows
+    t_low: jax.Array,        # f32[B, N-1]
+    t_high: jax.Array,       # f32[B, N-1]
+    prev_end: jax.Array,     # f32[S, B] per-(session, row) greedy carry
+    prev_count: jax.Array,   # i32[S, B]
+    *,
+    tail_cap: int,
+    engine: str = "dense",
+    cap_occ: Optional[int] = None,
+    max_window: int = 32,
+    parallel_schedule: bool = False,
+    block_next: Optional[int] = None,
+    block_prev: Optional[int] = None,
+    window_tiles: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    build_cap: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """:func:`count_corpus_tail_indexed` with PER-SESSION candidate rows.
+
+    The union layout dispatches every session against every key any session
+    wants — fine when frontiers agree, quadratic waste when they diverge
+    (the multi-tenant serving regime: row (s, b) is computed whether or not
+    session ``s`` ever reads key ``b``). Here ``symbols[s]`` holds session
+    ``s``'s OWN b-th candidate, so the dispatched grid is exactly the work
+    the pool needs: ``rows == sum_s |frontier_s|`` padded to one batch
+    class. Row semantics (suffix cutoffs, carries, overflow/tail_short
+    flags) are identical to the union entry — only the pairing changes.
+
+    Sessions with fewer than B rows pad by repeating their row 0 (a
+    session with no rows at all pads with type-0 rows); padded cells are
+    computed and never read, per the quiet-stream masking rule.
+
+    Returns ``(counts i32[S, B], prev_end f32[S, B], n_superset i32[S, B],
+    overflow bool[S, B], tail_short bool[S, B])``.
+    """
+    tables = jnp.asarray(tables, jnp.float32)
+    counts = jnp.asarray(counts, jnp.int32)
+    old_counts = jnp.asarray(old_counts, jnp.int32)
+    t_tail_start = jnp.asarray(t_tail_start, jnp.float32)
+    symbols = jnp.asarray(symbols, jnp.int32)
+    t_low = jnp.asarray(t_low, jnp.float32)
+    t_high = jnp.asarray(t_high, jnp.float32)
+    prev_end = jnp.asarray(prev_end, jnp.float32)
+    prev_count = jnp.asarray(prev_count, jnp.int32)
+    if build_cap is None:
+        build_cap = tables.shape[2]
+    s, b = tables.shape[0], symbols.shape[1]
+    if b == 0:
+        zi = jnp.zeros((s, 0), jnp.int32)
+        zb = jnp.zeros((s, 0), bool)
+        return zi, jnp.zeros((s, 0), jnp.float32), zi, zb, zb
+    p = plan_mod.plan_for(
+        "count_corpus_tail_grouped", level=symbols.shape[2],
+        n_types=tables.shape[1], cap=tables.shape[2], batch=b, streams=s,
+        tail_cap=int(tail_cap),
+        **_plan_knobs(engine, parallel_schedule, cap_occ, max_window,
+                      block_next, block_prev, window_tiles, interpret))
+    tables = plan_mod.pad_width(tables, p.cap, jnp.inf)
+    symbols = _pad_cols(symbols, p.batch)
+    prev_end = _pad_cols(prev_end, p.batch)
+    prev_count = _pad_cols(prev_count, p.batch)
+    if p.streams != s:
+        pad = p.streams - s
+        tables = jnp.concatenate(
+            [tables, jnp.full((pad,) + tables.shape[1:], jnp.inf,
+                              jnp.float32)], axis=0)
+        counts = jnp.concatenate(
+            [counts, jnp.zeros((pad, counts.shape[1]), jnp.int32)], axis=0)
+        old_counts = jnp.concatenate(
+            [old_counts, jnp.zeros((pad, old_counts.shape[1]), jnp.int32)],
+            axis=0)
+        t_tail_start = jnp.concatenate(
+            [t_tail_start, jnp.full((pad,), -jnp.inf, jnp.float32)], axis=0)
+        symbols = jnp.concatenate(
+            [symbols, jnp.zeros((pad,) + symbols.shape[1:], jnp.int32)],
+            axis=0)
+        prev_end = jnp.concatenate(
+            [prev_end, jnp.full((pad, p.batch), -jnp.inf, jnp.float32)],
+            axis=0)
+        prev_count = jnp.concatenate(
+            [prev_count, jnp.zeros((pad, p.batch), jnp.int32)], axis=0)
+    out = plan_mod.dispatch(
+        p, tables, counts, old_counts, jnp.asarray(build_cap, jnp.int32),
+        t_tail_start, symbols,
+        plan_mod.pad_rows(t_low, p.batch), plan_mod.pad_rows(t_high, p.batch),
+        prev_end, prev_count)
     return tuple(a[:s, :b] for a in out)
 
 

@@ -138,6 +138,25 @@ def type_index_update(
     return new_table, new_counts
 
 
+def type_index_update_batch(
+    tables: jax.Array,   # f32[S, n_types, cap] per-session indexes
+    counts: jax.Array,   # i32[S, n_types] true per-type totals so far
+    types: jax.Array,    # i32[S, m] per-session appended chunks, -1 padding
+    times: jax.Array,    # f32[S, m]
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter one appended chunk per session into a pool of type indexes.
+
+    The session-axis twin of :func:`type_index_update` (one vmapped pass, so
+    a serving flush pays one device program for the whole session pool).
+    Sessions with nothing to absorb this round pass all-padding rows
+    (``-1`` types): padding is remapped out of bounds before the scatters,
+    so their table and counts rows ride through bit-for-bit unchanged.
+    """
+    return jax.vmap(type_index_update)(
+        jnp.asarray(tables, jnp.float32), jnp.asarray(counts, jnp.int32),
+        jnp.asarray(types, jnp.int32), jnp.asarray(times, jnp.float32))
+
+
 def grow_type_index(table: jax.Array, new_cap: int) -> jax.Array:
     """Widen a type index to ``new_cap`` columns (+inf fill, contents kept).
 

@@ -201,7 +201,10 @@ def plan_for(
     cap_b = capacity_class(cap)
     batch_b = pow2_ceil(batch)
     streams_b = pow2_ceil(streams) if streams else 0
-    tile_cap = int(tail_cap) if fn == "count_tail" else cap_b
+    tile_cap = (int(tail_cap)
+                if fn in ("count_tail", "count_corpus_tail",
+                          "count_corpus_tail_grouped")
+                else cap_b)
     bn, bp, wt, ch, kind = resolve_tiles(
         engine, level - 1, tile_cap, max(streams_b, 1) * batch_b,
         block_next=block_next, block_prev=block_prev,
@@ -424,7 +427,8 @@ def uncacheable_reason(plan: MiningPlan) -> Optional[str]:
         return (f"malformed plan shape (level={plan.level}, "
                 f"n_types={plan.n_types}, cap={plan.cap}, "
                 f"batch={plan.batch})")
-    if plan.fn == "count_tail" and plan.tail_cap < 1:
+    if (plan.fn in ("count_tail", "count_corpus_tail",
+                    "count_corpus_tail_grouped") and plan.tail_cap < 1):
         return f"malformed tail view (tail_cap={plan.tail_cap})"
     if plan.level > MAX_CACHE_LEVEL:
         return f"level {plan.level} > MAX_CACHE_LEVEL={MAX_CACHE_LEVEL}"

@@ -68,11 +68,61 @@ _TAIL_SHORT_MSG = (
 
 @dataclasses.dataclass
 class _ChainState:
-    """Cached greedy chain state of one episode through append ``seq``."""
+    """Cached greedy chain state of one episode through append ``seq``.
+
+    Shared with :mod:`serving` — a pooled session's per-episode carry is
+    exactly a solo miner's (that identity is the serving differential bar).
+    """
 
     prev_end: float   # end time of the last interval the greedy took
     count: int        # non-overlapped count over the whole stream so far
     seq: int          # last append this state was advanced through
+
+
+def clean_chunk(types, times, n_types: int, last_time: float):
+    """Validate one appended chunk and strip its padding (host-side).
+
+    THE chunk acceptance rule, shared by :class:`StreamingMiner` and the
+    serving session pool: ``types < 0`` / non-finite times are padding and
+    are dropped (fixed-size device feeds hand buffers over as-is); what
+    remains must be in-alphabet, time-sorted, and start at/after
+    ``last_time``. Returns filtered ``(types i32[m], times f32[m])`` —
+    possibly empty — or raises ``ValueError``.
+    """
+    types = np.asarray(types, np.int32).reshape(-1)
+    times = np.asarray(times, np.float32).reshape(-1)
+    if types.shape != times.shape:
+        raise ValueError("types/times length mismatch")
+    keep = (types >= 0) & np.isfinite(times)
+    types, times = types[keep], times[keep]
+    if types.size == 0:
+        return types, times
+    if np.any(types >= n_types):
+        raise ValueError("event types out of range")
+    if np.any(np.diff(times) < 0) or times[0] < last_time:
+        raise ValueError("appended chunk must be time-sorted and start "
+                         "at/after the last appended event")
+    return types, times
+
+
+def suffix_cutoff(cfg: MinerConfig, chunk_start: float, chunk_end: float):
+    """Span-bounded suffix cutoff ``t0`` for a chunk starting at
+    ``chunk_start``: occurrences ending at chunk events start at/after
+    ``chunk_start - span``. The engines compare gaps in f32
+    (``t_prev >= t_next - hi``), so each of the up-to-``(max_level - 1)``
+    hops can admit ~an ulp of absolute error at the magnitude of the
+    times / t_high involved — the slack must be ABSOLUTE at that scale,
+    not relative at t0's (t0 can sit near zero while the stream lives at
+    large magnitudes). Extra history in the view is provably harmless; a
+    missing seed would not be. Shared by :class:`StreamingMiner` and the
+    serving session pool — bit-identical cutoffs are part of the serving
+    differential bar.
+    """
+    span = (cfg.max_level - 1) * float(cfg.t_high)
+    scale = max(abs(float(chunk_start)), abs(float(chunk_end)), span)
+    slack = 8.0 * cfg.max_level * float(np.spacing(np.float32(scale)))
+    t0 = np.float32(np.float64(chunk_start) - span - slack)
+    return np.nextafter(t0, np.float32(-np.inf), dtype=np.float32)
 
 
 class StreamingMiner:
@@ -167,19 +217,9 @@ class StreamingMiner:
         return dict(self._results)
 
     def append(self, types, times) -> Dict[int, LevelArrays]:
-        types = np.asarray(types, np.int32).reshape(-1)
-        times = np.asarray(times, np.float32).reshape(-1)
-        if types.shape != times.shape:
-            raise ValueError("types/times length mismatch")
-        keep = (types >= 0) & np.isfinite(times)
-        types, times = types[keep], times[keep]
+        types, times = clean_chunk(types, times, self.n_types, self.last_time)
         if types.size == 0:
             return self.results         # nothing can change (already a copy)
-        if np.any(types >= self.n_types):
-            raise ValueError("event types out of range")
-        if np.any(np.diff(times) < 0) or times[0] < self.last_time:
-            raise ValueError("appended chunk must be time-sorted and start "
-                             "at/after the last appended event")
 
         # 1) incremental index: grow-if-needed, then scatter ONLY the chunk
         old_counts_dev = self.counts_dev
@@ -210,19 +250,9 @@ class StreamingMiner:
         self.last_time = float(times[-1])
         self.seq += 1
 
-        # 2) span-bounded suffix cutoff: occurrences ending at chunk events
-        # start at/after t_chunk0 - span. The engines compare gaps in f32
-        # (`t_prev >= t_next - hi`), so each of the up-to-(max_level - 1)
-        # hops can admit ~an ulp of absolute error at the magnitude of the
-        # times / t_high involved — the slack must be ABSOLUTE at that
-        # scale, not relative at t0's (t0 can sit near zero while the
-        # stream lives at large magnitudes). Extra history in the view is
-        # provably harmless; a missing seed would not be.
-        span = (self.cfg.max_level - 1) * float(self.cfg.t_high)
-        scale = max(abs(float(times[0])), abs(float(times[-1])), span)
-        slack = 8.0 * self.cfg.max_level * float(np.spacing(np.float32(scale)))
-        t0 = np.float32(np.float64(times[0]) - span - slack)
-        t0 = np.nextafter(t0, np.float32(-np.inf), dtype=np.float32)
+        # 2) span-bounded suffix cutoff (see suffix_cutoff for the f32
+        # slack rationale: absolute at stream magnitude, never relative)
+        t0 = suffix_cutoff(self.cfg, float(times[0]), float(times[-1]))
         # exact host sizing of the widest per-type suffix
         i0 = int(np.searchsorted(self._all_times, t0, side="left"))
         suffix = np.bincount(self._all_types[i0:], minlength=self.n_types)

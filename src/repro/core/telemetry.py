@@ -91,3 +91,47 @@ def flag_stragglers(
 ) -> List[str]:
     return [h for h, c in straggler_scores(log, window=window, repeat=repeat).items()
             if c >= min_count]
+
+
+class StragglerSessions:
+    """Live straggler scoring through the multi-tenant serving pool.
+
+    The streaming twin of :func:`straggler_scores`: each host is ONE
+    session in a :class:`serving.MiningSessionServer` (alphabet = the
+    single SLOW type; the chained-SLOW signature is the level-``repeat``
+    episode), SLOW timestamps are appended as they are observed, and
+    every host's non-overlapped count comes out of ONE batched pool
+    flush instead of a per-host ``count_nonoverlapped`` loop over a
+    rebuilt stream. Counts are identical: a single-type episode's count
+    depends only on that host's SLOW substream.
+    """
+
+    def __init__(self, *, window: float, repeat: int = 3,
+                 engine: str = "dense", hosts_hint: int = 16):
+        from .mining import MinerConfig
+        from .serving import MiningSessionServer
+        self.repeat = int(repeat)
+        # threshold 1: a score of 0 simply reports the episode infrequent
+        cfg = MinerConfig(t_low=0.0, t_high=float(window), threshold=1,
+                          max_level=self.repeat, engine=engine)
+        self.server = MiningSessionServer(1, cfg, max_sessions=hosts_hint)
+        self._sid: Dict[str, int] = {}
+
+    def observe(self, host: str, times: Sequence[float]) -> None:
+        """Append a chunk of SLOW-event timestamps for ``host`` (buffered;
+        the next ``scores()`` read absorbs every host's chunks at once)."""
+        times = np.asarray(times, np.float32).reshape(-1)
+        sid = self._sid.get(host)
+        if sid is None:
+            sid = self._sid[host] = self.server.create_session()
+        self.server.append(sid, np.zeros(times.shape, np.int32), times)
+
+    def scores(self) -> Dict[str, int]:
+        """Per-host non-overlapped chained-SLOW count, from the pool's
+        level-``repeat`` serving results (one batched flush)."""
+        out: Dict[str, int] = {}
+        for host, sid in self._sid.items():
+            level = self.server.results(sid).get(self.repeat)
+            out[host] = (int(level.counts[0])
+                         if level is not None and level.counts.size else 0)
+        return out

@@ -40,8 +40,13 @@ class StragglerMonitor:
     log: tele.TelemetryLog = dataclasses.field(default_factory=tele.TelemetryLog)
     _step_times: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
     _wall: List[float] = dataclasses.field(default_factory=list)
+    _sessions: Optional[tele.StragglerSessions] = None
 
     def record_step(self, host_durations: Dict[str, float], wall: float) -> None:
+        if self._sessions is None:
+            self._sessions = tele.StragglerSessions(
+                window=self.window, repeat=self.repeat,
+                hosts_hint=max(len(host_durations), 1))
         self._wall.append(wall)
         durs = list(host_durations.values())
         med = float(np.median(durs)) if durs else 0.0
@@ -49,12 +54,18 @@ class StragglerMonitor:
             self._step_times.setdefault(h, []).append(d)
             if med > 0 and d > self.slow_factor * med:
                 self.log.emit(f"SLOW:{h}", wall)
+                # live path: the SLOW event streams into the host's serving
+                # session as it happens (buffered; scores() flushes the pool)
+                self._sessions.observe(h, [wall])
 
     def scores(self) -> Dict[str, int]:
-        if not self.log.kinds:
+        """Per-host chained-SLOW scores from the serving pool — every
+        host's session absorbed and mined in ONE batched flush (identical
+        counts to the cold per-host ``tele.straggler_scores`` loop; the
+        batch path stays available on the accumulated ``self.log``)."""
+        if self._sessions is None:
             return {}
-        return tele.straggler_scores(
-            self.log, window=self.window, repeat=self.repeat)
+        return self._sessions.scores()
 
     def flagged(self) -> List[str]:
         return [h for h, c in self.scores().items() if c >= self.min_count]

@@ -1,0 +1,371 @@
+"""Multi-tenant serving differential suite + eviction/churn edge cases.
+
+The load-bearing property: every session served by a
+``MiningSessionServer`` pool returns bit-for-bit what a standalone
+``StreamingMiner`` fed the same chunks returns — across engines,
+interleaving patterns (round-robin, bursty sessions that skip rounds,
+random append order, coalesced multi-chunk rounds), per-session
+thresholds, pool capacity growth mid-serve, and evict/re-create churn
+into recycled slots. Plus the serving-specific contracts: eager append
+validation, append-to-evicted raising, the session pool growing one
+capacity class at a time (only the new bucket compiles), and the warm
+protocol leaving zero plan-cache misses on live traffic.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import MinerConfig, MiningSessionServer, StreamingMiner
+from repro.core import plan
+
+ENGINES = ("dense", "dense_pallas", "dense_pallas_fused", "count_scan_write",
+           "atomic_sort", "flags")
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    plan.reset_cache()
+    plan.reset_trace_counts()
+    yield
+    plan.reset_cache()
+    plan.reset_trace_counts()
+
+
+def _cfg(engine="dense", **kw):
+    base = dict(t_low=0.0, t_high=1.5, threshold=3, max_level=3,
+                engine=engine, cap_occ=1024, max_window=64)
+    base.update(kw)
+    return MinerConfig(**base)
+
+
+def _gen_chunks(rng, n_types, n_chunks, lo=3, hi=40):
+    """One session's feed: time-sorted chunks with strictly growing spans."""
+    t = 0.0
+    out = []
+    for _ in range(n_chunks):
+        n = int(rng.integers(lo, hi))
+        ty = rng.integers(0, n_types, n).astype(np.int32)
+        dt = rng.random(n).astype(np.float64) * 0.7 + 0.01
+        tm = t + np.cumsum(dt)
+        t = float(tm[-1]) + float(rng.random()) * 0.5
+        out.append((ty, tm.astype(np.float32)))
+    return out
+
+
+def _assert_levels_equal(got, want, ctx):
+    assert set(got) == set(want), (ctx, sorted(got), sorted(want))
+    for lvl in want:
+        assert np.array_equal(got[lvl].symbols, want[lvl].symbols), (
+            ctx, lvl, got[lvl].symbols, want[lvl].symbols)
+        assert np.array_equal(got[lvl].counts, want[lvl].counts), (
+            ctx, lvl, got[lvl].counts, want[lvl].counts)
+        assert got[lvl].n_candidates == want[lvl].n_candidates, (ctx, lvl)
+
+
+def _check_serving(engine, seed, *, n_sessions=4, n_chunks=3, n_types=5,
+                   interleave="round_robin", initial_cap=32, thresholds=None,
+                   max_sessions=2, **cfg_kw):
+    """Serve ``n_sessions`` feeds and compare every session after every
+    round against its solo ``StreamingMiner`` twin fed the same chunks."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(engine, **cfg_kw)
+    feeds = [_gen_chunks(rng, n_types, n_chunks) for _ in range(n_sessions)]
+    if thresholds is None:
+        thresholds = [None] * n_sessions
+
+    srv = MiningSessionServer(n_types, cfg, max_sessions=max_sessions,
+                              initial_cap=initial_cap)
+    sids = [srv.create_session(threshold=t) for t in thresholds]
+    solos = [StreamingMiner(
+        n_types,
+        cfg if t is None else dataclasses.replace(cfg, threshold=t),
+        initial_cap=initial_cap) for t in thresholds]
+
+    for r in range(n_chunks):
+        if interleave == "round_robin":
+            order = list(range(n_sessions))
+        elif interleave == "random":
+            order = list(rng.permutation(n_sessions))
+        elif interleave == "bursty":
+            # each session appends only on ~2/3 of the rounds (never none)
+            order = [s for s in range(n_sessions)
+                     if (s + r) % 3 != 0 or n_chunks == 1]
+        else:
+            raise AssertionError(interleave)
+        for s in order:
+            srv.append(sids[s], *feeds[s][r])
+            solos[s].append(*feeds[s][r])
+        srv.flush()
+        for s in range(n_sessions):
+            _assert_levels_equal(srv.results(sids[s]), solos[s].results,
+                                 (engine, seed, interleave, r, s))
+    return srv, sids, solos, feeds, rng
+
+
+@pytest.mark.parametrize("engine", ["dense", "dense_pallas_fused",
+                                    "count_scan_write", "flags"])
+def test_serving_matches_standalone(engine):
+    _check_serving(engine, seed=0)
+
+
+@pytest.mark.parametrize("interleave", ["random", "bursty"])
+def test_serving_interleavings(interleave):
+    _check_serving("dense", seed=1, n_chunks=4, interleave=interleave)
+
+
+def test_serving_coalesces_multiple_appends_per_flush():
+    """Several chunks queued between flushes absorb as one — and still
+    match the solo miner that appended them one at a time (the streaming
+    chunking-invariance property, inherited by the pool)."""
+    rng = np.random.default_rng(2)
+    cfg = _cfg()
+    feeds = [_gen_chunks(rng, 5, 6) for _ in range(3)]
+    srv = MiningSessionServer(5, cfg, max_sessions=4, initial_cap=32)
+    sids = [srv.create_session() for _ in range(3)]
+    solos = [StreamingMiner(5, cfg, initial_cap=32) for _ in range(3)]
+    for half in (slice(0, 3), slice(3, 6)):
+        for s in range(3):
+            for ty, tm in feeds[s][half]:
+                srv.append(sids[s], ty, tm)
+                solos[s].append(ty, tm)
+        srv.flush()
+        for s in range(3):
+            _assert_levels_equal(srv.results(sids[s]), solos[s].results,
+                                 ("coalesce", half, s))
+
+
+def test_serving_per_session_thresholds():
+    _check_serving("dense", seed=3, thresholds=[2, 3, 5, None])
+
+
+def test_serving_pool_cap_growth_mid_serve():
+    # tiny initial cap: the per-type pool must grow (and re-bucket)
+    # mid-serve without perturbing any session
+    _check_serving("dense", seed=4, initial_cap=8, n_chunks=4)
+
+
+def test_results_flushes_whole_pool():
+    """Reading ONE session's results absorbs every session's pending
+    chunks (one batched flush, not a private one)."""
+    rng = np.random.default_rng(5)
+    cfg = _cfg()
+    feeds = [_gen_chunks(rng, 4, 1) for _ in range(2)]
+    srv = MiningSessionServer(4, cfg, max_sessions=2)
+    a, b = srv.create_session(), srv.create_session()
+    srv.append(a, *feeds[0][0])
+    srv.append(b, *feeds[1][0])
+    srv.results(a)
+    assert srv.pool.dirty_slots() == []
+    solo = StreamingMiner(4, cfg)
+    solo.append(*feeds[1][0])
+    _assert_levels_equal(srv.results(b), solo.results, "flushed-by-peer")
+
+
+def test_never_appended_session_matches_standalone():
+    cfg = _cfg(threshold=1)
+    srv = MiningSessionServer(4, cfg)
+    sid = srv.create_session()
+    _assert_levels_equal(srv.results(sid), StreamingMiner(4, cfg).results,
+                         "never-appended")
+
+
+def test_append_validation_is_eager():
+    srv = MiningSessionServer(4, _cfg())
+    sid = srv.create_session()
+    with pytest.raises(ValueError, match="out of range"):
+        srv.append(sid, [0, 9], [0.0, 1.0])
+    with pytest.raises(ValueError, match="time-sorted"):
+        srv.append(sid, [0, 1], [2.0, 1.0])
+    # validation is against the last QUEUED event, not the last flushed one
+    assert srv.append(sid, [0, 1], [0.0, 5.0]) == 2
+    with pytest.raises(ValueError, match="time-sorted"):
+        srv.append(sid, [2], [4.0])
+    # all-padding chunks are accepted and absorb to nothing
+    assert srv.append(sid, [-1, -1], [np.inf, np.inf]) == 0
+    srv.flush()
+    assert srv.pool.dirty_slots() == []
+
+
+# -- eviction / churn edge cases --------------------------------------------
+
+
+def test_evict_and_recreate_into_recycled_slot():
+    """Churn: evict sessions mid-serve (pending chunks included), re-create
+    into their recycled slots, keep serving — survivors unperturbed and the
+    new tenants bit-for-bit fresh solo miners."""
+    srv, sids, solos, feeds, rng = _check_serving(
+        "dense", seed=6, n_sessions=4, n_chunks=2, max_sessions=4)
+    n_types = 5
+
+    # evict one mid-life and one with a PENDING chunk (discarded with it)
+    srv.append(sids[1], [0, 1], [1e6, 1e6 + 1.0])
+    for s in (1, 3):
+        srv.evict(sids[s])
+    assert len(srv) == 2
+    assert sorted(srv.pool.live_slots()) == sorted(
+        srv._slot_of[sids[s]] for s in (0, 2))
+
+    new_feeds = [_gen_chunks(rng, n_types, 2) for _ in range(2)]
+    new_sids = [srv.create_session() for _ in range(2)]
+    assert srv.pool.n_slots == 4          # recycled, not grown
+    new_solos = [StreamingMiner(n_types, _cfg(), initial_cap=32)
+                 for _ in range(2)]
+    for r in range(2):
+        for j in range(2):
+            srv.append(new_sids[j], *new_feeds[j][r])
+            new_solos[j].append(*new_feeds[j][r])
+        srv.flush()
+        for j in range(2):
+            _assert_levels_equal(srv.results(new_sids[j]),
+                                 new_solos[j].results, ("recycled", r, j))
+        for s in (0, 2):                   # survivors keep their results
+            _assert_levels_equal(srv.results(sids[s]), solos[s].results,
+                                 ("survivor", r, s))
+
+
+def test_append_to_evicted_session_raises():
+    srv = MiningSessionServer(3, _cfg())
+    sid = srv.create_session()
+    srv.evict(sid)
+    with pytest.raises(KeyError, match="evicted"):
+        srv.append(sid, [0], [1.0])
+    with pytest.raises(KeyError, match="evicted"):
+        srv.results(sid)
+    with pytest.raises(KeyError):
+        srv.evict(sid)
+    # a NEW session gets a fresh id even when it reuses the slot
+    sid2 = srv.create_session()
+    assert sid2 != sid
+    with pytest.raises(KeyError, match="evicted"):
+        srv.append(sid, [0], [1.0])
+
+
+def test_all_sessions_evicted_pool_keeps_serving():
+    rng = np.random.default_rng(7)
+    cfg = _cfg()
+    srv = MiningSessionServer(4, cfg, max_sessions=2)
+    sids = [srv.create_session() for _ in range(2)]
+    for sid in sids:
+        srv.append(sid, *_gen_chunks(rng, 4, 1)[0])
+    srv.flush()
+    for sid in sids:
+        srv.evict(sid)
+    assert len(srv) == 0 and srv.pool.live_slots() == []
+    srv.flush()                            # empty pool: a no-op
+    feed = _gen_chunks(rng, 4, 2)
+    sid = srv.create_session()
+    solo = StreamingMiner(4, cfg)
+    for ty, tm in feed:
+        srv.append(sid, ty, tm)
+        solo.append(ty, tm)
+        _assert_levels_equal(srv.results(sid), solo.results, "after-wipe")
+
+
+def test_slot_boundary_growth_compiles_only_new_bucket():
+    """Crossing the session-axis capacity class re-buckets the pool:
+    exactly the streams=4 plans compile, every streams=2 plan stays
+    cached (hit, not re-compiled)."""
+    rng = np.random.default_rng(8)
+    cfg = _cfg(threshold=2)
+    srv = MiningSessionServer(4, cfg, max_sessions=2, initial_cap=64)
+    feeds = [_gen_chunks(rng, 4, 2) for _ in range(3)]
+    sids = [srv.create_session() for _ in range(2)]
+    for r in range(2):
+        for s in range(2):
+            srv.append(sids[s], *feeds[s][r])
+        srv.flush()
+    before = set(plan.cached_plans())
+    assert before and all(p.streams == 2 for p in before)
+
+    sids.append(srv.create_session())      # 2 -> 4: one new capacity class
+    assert srv.pool.n_slots == 4
+    for r in range(2):
+        srv.append(sids[2], *feeds[2][r])
+        srv.flush()
+    after = plan.cached_plans()
+    new = [p for p in after if p not in before]
+    assert new and all(p.streams == 4 for p in new)
+    assert all(p.fn == "count_corpus_tail_grouped" for p in after)
+
+    # and the grown pool still serves correct results
+    solo = StreamingMiner(4, cfg, initial_cap=64)
+    for r in range(2):
+        solo.append(*feeds[2][r])
+    _assert_levels_equal(srv.results(sids[2]), solo.results, "post-growth")
+
+
+def test_warm_serving_has_zero_plan_cache_misses():
+    """The serving-startup gate: after ``warm()`` at the pool's capacity
+    classes, live traffic that stays inside them never compiles — and
+    never even misses the plan cache."""
+    rng = np.random.default_rng(9)
+    cfg = _cfg(threshold=2)
+    srv = MiningSessionServer(4, cfg, max_sessions=8, initial_cap=64)
+    report = srv.warm(batches=[16, 32, 64], tail_caps=[16, 32])
+    assert report["compiled"] == len(srv.plans(batches=[16, 32, 64],
+                                               tail_caps=[16, 32]))
+    base = plan.cache_stats()["misses"]
+    feeds = [_gen_chunks(rng, 4, 2) for _ in range(5)]
+    sids = [srv.create_session() for _ in range(5)]
+    for r in range(2):
+        for s in range(5):
+            srv.append(sids[s], *feeds[s][r])
+        srv.flush()
+    for sid in sids:
+        srv.results(sid)
+    assert plan.cache_stats()["misses"] == base
+
+
+def test_grouped_kernel_matches_union_kernel():
+    """`count_corpus_tail_grouped` is `count_corpus_tail_indexed` with the
+    key->session pairing made explicit: feeding each session the shared
+    union rows in a per-session permutation must reproduce the union
+    grid's cells exactly (counts, carries, and overflow/short flags)."""
+    from repro.core import (count_corpus_tail_grouped,
+                            count_corpus_tail_indexed)
+
+    rng = np.random.default_rng(11)
+    s, n_types, cap, b, level, tail = 5, 6, 32, 7, 3, 8
+    tables = np.full((s, n_types, cap), np.inf, np.float32)
+    counts = np.zeros((s, n_types), np.int32)
+    for i in range(s):
+        for t in range(n_types):
+            n = int(rng.integers(0, cap - 4))
+            tables[i, t, :n] = np.sort(rng.random(n).astype(np.float32) * 9)
+            counts[i, t] = n
+    old_counts = (counts * rng.random((s, n_types))).astype(np.int32)
+    t0 = rng.random(s).astype(np.float32) * 9
+    sym = rng.integers(0, n_types, (b, level)).astype(np.int32)
+    lo = np.full((b, level - 1), 0.0, np.float32)
+    hi = np.full((b, level - 1), 2.0, np.float32)
+    pe = np.where(rng.random((s, b)) < 0.5, -np.inf,
+                  rng.random((s, b)) * 5).astype(np.float32)
+    pc = rng.integers(0, 4, (s, b)).astype(np.int32)
+
+    ref = [np.asarray(a) for a in count_corpus_tail_indexed(
+        tables, counts, old_counts, t0, sym, lo, hi, pe, pc,
+        tail_cap=tail, engine="dense", cap_occ=256)]
+    perms = np.stack([rng.permutation(b) for _ in range(s)])
+    sym_g = sym[perms]                                      # [S, B, N]
+    pe_g = np.take_along_axis(pe, perms, axis=1)
+    pc_g = np.take_along_axis(pc, perms, axis=1)
+    got = [np.asarray(a) for a in count_corpus_tail_grouped(
+        tables, counts, old_counts, t0, sym_g, lo, hi, pe_g, pc_g,
+        tail_cap=tail, engine="dense", cap_occ=256)]
+    for r, g in zip(ref, got):
+        assert np.array_equal(np.take_along_axis(r, perms, axis=1), g)
+
+
+def test_serving_rejects_mesh():
+    with pytest.raises(ValueError, match="single-device"):
+        MiningSessionServer(4, _cfg(mesh=object()))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("interleave", ["round_robin", "random", "bursty"])
+def test_serving_sweep(engine, seed, interleave):
+    _check_serving(engine, seed, n_sessions=6, n_chunks=4,
+                   interleave=interleave, max_sessions=2)
