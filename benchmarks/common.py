@@ -12,11 +12,14 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall-time per call in microseconds (after jit warmup)."""
     for _ in range(warmup):
         out = fn(*args)
+        # staticcheck: disable=REPRO004 -- benchmark timer: the sync IS the
+        # measurement boundary, not a mining-loop host round-trip
         jax.block_until_ready(out)
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
         out = fn(*args)
+        # staticcheck: disable=REPRO004 -- benchmark timer sync (see above)
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
     return float(np.median(times) * 1e6)

@@ -14,8 +14,10 @@ bucket and regenerates ``src/repro/kernels/tuned_configs.json`` (the table
 """
 import argparse
 import json
+import subprocess
 import sys
 import traceback
+from pathlib import Path
 
 REGRESSION_THRESHOLD = 0.25   # fastest engine may not slow down >25%
 FUSED_ENGINE = "dense_pallas_fused"
@@ -240,6 +242,8 @@ def run_autotune(top_k: int = 3, out_path: str | None = None) -> int:
                             window_tiles=cand.window_tiles,
                             chunk=cand.chunk)
 
+                        # staticcheck: disable=REPRO003 -- autotune probe
+                        # deliberately times the raw jitted dispatch path
                         @jax.jit
                         def fn(tbs, lo, hi, pe, pc, _cfg=cfg):
                             return count_batch_dispatch(
@@ -269,7 +273,15 @@ def run_autotune(top_k: int = 3, out_path: str | None = None) -> int:
 
 SUITE_NAMES = ("counting", "mining", "corpus", "streaming", "serving",
                "episode_length", "frequency", "instruction_mix",
-               "distributed", "compile")
+               "distributed", "compile", "staticcheck")
+
+
+def _run_staticcheck() -> None:
+    """Shell to scripts/staticcheck.py --all: the bench harness is the one
+    entry point every CI smoke already exercises, so a broken checker (or a
+    dirty tree) fails fast here too."""
+    script = Path(__file__).resolve().parents[1] / "scripts" / "staticcheck.py"
+    subprocess.run([sys.executable, str(script), "--all"], check=True)
 
 
 def unknown_suites(chosen) -> list:
@@ -332,6 +344,7 @@ def main() -> None:
         "instruction_mix": bench_instruction_mix.run,  # paper Table III
         "distributed": bench_distributed.run,      # beyond-paper scaling
         "compile": bench_compile.run,              # AOT plan-cache amortization
+        "staticcheck": _run_staticcheck,           # invariant checker (cheap)
     }
     print("name,us_per_call,derived")
     failed = 0

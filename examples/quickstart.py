@@ -1,6 +1,13 @@
 """Quickstart: count and mine frequent episodes in an event stream.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Before sending a PR, run the static invariant checker (DESIGN.md §13) —
+it lint-checks the tree and traces the registered plan matrix, and CI
+runs it blocking:
+
+    PYTHONPATH=src python scripts/staticcheck.py --all       # what CI runs
+    PYTHONPATH=src python scripts/staticcheck.py --changed-only  # fast loop
 """
 import numpy as np
 

@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Run the repro staticcheck (DESIGN.md §13).
+
+Modes:
+  --all            lint every file + jaxpr-check the default plan matrix
+                   (the blocking CI job; this is the default mode)
+  --changed-only   lint only files changed vs HEAD, skip the jaxpr layer
+                   (fast local pre-commit loop)
+  --full-matrix    --all with the nightly shape-swept plan matrix
+  --hlo            additionally compile one representative plan and walk
+                   its optimized HLO for host custom-calls
+  --report PATH    write the JSON report artifact
+  --list-rules     print the rule table and exit
+
+Exit status: 0 iff there are zero unsuppressed findings.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis import staticcheck  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--all", action="store_true",
+                      help="full tree + default plan matrix (default)")
+    mode.add_argument("--changed-only", action="store_true",
+                      help="lint changed files only; skip the jaxpr layer")
+    mode.add_argument("--full-matrix", action="store_true",
+                      help="full tree + nightly shape-swept plan matrix")
+    ap.add_argument("--hlo", action="store_true",
+                    help="also compile+walk one representative plan's HLO")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="write the JSON report artifact here")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, desc in sorted(staticcheck.RULES.items()):
+            print(f"{code}  {desc}")
+        return 0
+
+    root = staticcheck.runner.repo_root()
+    if args.changed_only:
+        files = staticcheck.changed_files(root)
+        report = staticcheck.run(root=root, files=files, jaxpr=False)
+    else:
+        matrix = "full" if args.full_matrix else "default"
+        report = staticcheck.run(root=root, matrix=matrix, hlo=args.hlo)
+
+    print(report["text"])
+    print(f"staticcheck: {report['files_checked']} files, "
+          f"{report['plans_checked']} plans (matrix={report['matrix']})")
+    if args.report is not None:
+        args.report.parent.mkdir(parents=True, exist_ok=True)
+        args.report.write_text(staticcheck.report_json(report))
+        print(f"staticcheck: report written to {args.report}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

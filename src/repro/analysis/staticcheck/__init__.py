@@ -1,0 +1,25 @@
+"""repro.analysis.staticcheck — static enforcement of the miner's
+sync, recompile, and kernel contracts (DESIGN.md §13).
+
+Two layers:
+
+* :mod:`.astlint` — stdlib-``ast`` lint rules REPRO001–REPRO007 over the
+  source tree (the bug classes PR 5/6/7 fixed by hand, kept fixed).
+* :mod:`.jaxpr_checks` — trace-level checks REPRO101–REPRO104 over every
+  registered counting fn × engine: callback-free jaxprs, capacity-class
+  rounding, t_min-once, and Pallas tile/grid/VMEM contracts.
+
+Run via ``scripts/staticcheck.py`` (``--all`` | ``--changed-only`` |
+``--full-matrix``); CI runs it blocking on every push.
+"""
+from .findings import (Baseline, Finding, RULES, filter_findings,
+                       format_findings, load_baseline, parse_suppressions)
+from . import astlint, jaxpr_checks
+from .runner import changed_files, discover_files, report_json, run
+
+__all__ = [
+    "Baseline", "Finding", "RULES", "astlint", "jaxpr_checks",
+    "changed_files", "discover_files", "filter_findings",
+    "format_findings", "load_baseline", "parse_suppressions",
+    "report_json", "run",
+]

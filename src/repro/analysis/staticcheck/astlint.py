@@ -1,0 +1,319 @@
+"""Layer 2 — AST lint rules (stdlib ``ast`` only, no new deps).
+
+Each rule encodes a bug class this repo has actually shipped and fixed:
+
+* REPRO001 — ``cap or default``: PR 5 swept a whole family of falsy-`or`
+  defaults where ``cap=0`` / ``cap_occ=0`` are *valid* values that the
+  ``or`` silently replaced. Capacity-like names must default via
+  ``is None``.
+* REPRO002 — a function accepts an ``interpret``/tile knob but never
+  reads it: the knob dies there instead of reaching the kernel layer
+  (the PR 6 tile-threading hazard).
+* REPRO003 — direct ``jax.jit``/``pl.pallas_call`` outside
+  ``core/plan.py``/``kernels/``: recompiles per call site and bypasses
+  the PR 7 AOT executable cache. Sanctioned escape hatches carry inline
+  suppressions, so every bypass is enumerable by grepping the code.
+* REPRO004 — ``device_get``/``block_until_ready`` inside a loop body:
+  the PR 1/6 one-sync-per-level contract. The four sanctioned per-level
+  sync points are inline-suppressed — the suppressions ARE the list of
+  allowed syncs.
+* REPRO005 — an ``*Engine`` class or ``_build_*``/``_specs_*`` builder
+  in a registering module that never reaches
+  ``register_engine``/``register_fn``: dead registry candidates are
+  invisible to the warm()/staticcheck plan matrices.
+* REPRO006/REPRO007 — trailing whitespace / tabs: the two mechanical
+  rules the advisory ruff-format gate cannot enforce in this container
+  (no ruff, no network — see ci.yml), kept blocking here instead.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set
+
+from .findings import Finding
+
+__all__ = ["lint_source", "lint_text", "lint_file", "CAPACITY_NAMES",
+           "KNOB_NAMES", "SPINE_ALLOWED"]
+
+#: Names whose value 0 is semantically valid, so `x or d` is a bug.
+CAPACITY_NAMES: Set[str] = {
+    "cap", "capacity", "cap_occ", "tail_cap", "tile_cap", "cap_rows",
+    "max_window", "window_tiles", "block_next", "block_prev", "chunk",
+    "streams", "batch", "n_events", "max_candidates",
+}
+
+#: Knob params that exist only to be forwarded to the next layer.
+KNOB_NAMES: Set[str] = {
+    "interpret", "block_next", "block_prev", "window_tiles", "chunk",
+}
+
+#: Paths allowed to call jax.jit / pallas_call directly (REPRO003): the
+#: dispatch spine itself and the kernel layer it compiles.
+SPINE_ALLOWED = ("src/repro/core/plan.py", "src/repro/kernels/")
+
+
+def _is_capacity_name(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        name = node.id
+    elif isinstance(node, ast.Attribute):
+        name = node.attr
+    else:
+        return None
+    if (name in CAPACITY_NAMES or name.endswith("_cap")
+            or name.startswith("cap_")):
+        return name
+    return None
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.experimental.pallas.pallas_call' for an attribute chain, or ''."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    d = _dotted(node)
+    return d == "jax.jit" or d.endswith(".jax.jit") or d == "jit"
+
+
+def _is_pallas_call(node: ast.AST) -> bool:
+    d = _dotted(node)
+    return d.split(".")[-1] == "pallas_call" if d else False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+        self._loop_depth = 0
+        self._condition_tests: Set[int] = set()
+        # module-level registry bookkeeping for REPRO005
+        self.registered_names: Set[str] = set()
+        self.has_register_fn = False
+        self.has_register_engine = False
+        self.module_defs: List[ast.FunctionDef] = []
+        self.module_classes: List[ast.ClassDef] = []
+
+    def _flag(self, node: ast.AST, code: str, message: str) -> None:
+        self.findings.append(
+            Finding(self.path, getattr(node, "lineno", 0), code, message))
+
+    # -- REPRO001 ----------------------------------------------------------
+    def _note_condition(self, test: ast.AST) -> None:
+        # `if cap or default:` is a truthiness *test*, not a default —
+        # only value-position BoolOps are the PR 5 bug shape.
+        self._condition_tests.add(id(test))
+
+    def visit_If(self, node: ast.If) -> None:
+        self._note_condition(node.test)
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._note_condition(node.test)
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        self._note_condition(node.test)
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._note_condition(node.test)
+        self.generic_visit(node)
+
+    def visit_BoolOp(self, node: ast.BoolOp) -> None:
+        if (isinstance(node.op, ast.Or) and id(node) not in
+                self._condition_tests):
+            name = _is_capacity_name(node.values[0])
+            if name is not None:
+                self._flag(node, "REPRO001",
+                           f"`{name} or ...` treats {name}=0 as unset; "
+                           f"use `{name} if {name} is not None else ...`")
+        self.generic_visit(node)
+
+    # -- REPRO002 ----------------------------------------------------------
+    def _check_knobs(self, node) -> None:
+        args = node.args
+        params = (args.posonlyargs + args.args + args.kwonlyargs)
+        knob_params = [a.arg for a in params
+                       if a.arg in KNOB_NAMES and not a.arg.startswith("_")]
+        if not knob_params:
+            return
+        body = node.body
+        if body and isinstance(body[0], ast.Expr) and isinstance(
+                body[0].value, ast.Constant):
+            body = body[1:]  # skip docstring
+        # trivial bodies (Protocol stubs, NotImplementedError shells) are
+        # declarations, not plumbing — nothing to thread.
+        if all(isinstance(s, (ast.Pass, ast.Raise)) or
+               (isinstance(s, ast.Expr) and isinstance(s.value, ast.Constant))
+               for s in body):
+            return
+        loaded: Set[str] = set()
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Name) and isinstance(
+                        sub.ctx, ast.Load):
+                    loaded.add(sub.id)
+        for knob in knob_params:
+            if knob not in loaded:
+                self._flag(node, "REPRO002",
+                           f"knob parameter `{knob}` accepted by "
+                           f"`{node.name}` but never used/threaded")
+
+    def _check_decorators(self, node) -> None:
+        # bare `@jax.jit` (an Attribute, not a Call) never reaches
+        # visit_Call — check decorator lists explicitly
+        if self.path.startswith(SPINE_ALLOWED):
+            return
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if _is_jax_jit(target) and not isinstance(dec, ast.Call):
+                self.findings.append(Finding(
+                    self.path, dec.lineno, "REPRO003",
+                    "@jax.jit decorator outside plan.py/kernels/ bypasses "
+                    "the AOT executable cache; route through "
+                    "plan.dispatch/register_fn"))
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_knobs(node)
+        self._check_decorators(node)
+        # loops don't cross a function boundary: a closure defined inside a
+        # loop body is not itself "in" the loop for sync accounting.
+        outer = self._loop_depth
+        self._loop_depth = 0
+        self.generic_visit(node)
+        self._loop_depth = outer
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._check_knobs(node)
+        self._check_decorators(node)
+        outer = self._loop_depth
+        self._loop_depth = 0
+        self.generic_visit(node)
+        self._loop_depth = outer
+
+    # -- REPRO003 / REPRO004 ----------------------------------------------
+    def visit_For(self, node: ast.For) -> None:
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        in_spine = self.path.startswith(SPINE_ALLOWED)
+        if not in_spine:
+            if _is_jax_jit(func):
+                self._flag(node, "REPRO003",
+                           "direct jax.jit outside plan.py/kernels/ "
+                           "bypasses the AOT executable cache; route "
+                           "through plan.dispatch/register_fn")
+            elif _is_pallas_call(func):
+                self._flag(node, "REPRO003",
+                           "direct pallas_call outside kernels/; kernels "
+                           "are launched via the kernel layer only")
+            elif (_dotted(func).endswith("functools.partial")
+                  or _dotted(func) == "partial") and node.args:
+                if _is_jax_jit(node.args[0]):
+                    self._flag(node, "REPRO003",
+                               "functools.partial(jax.jit, ...) outside "
+                               "plan.py/kernels/ bypasses the AOT "
+                               "executable cache")
+        if self._loop_depth > 0:
+            d = _dotted(func)
+            tail = d.split(".")[-1] if d else ""
+            if tail in ("device_get", "block_until_ready"):
+                self._flag(node, "REPRO004",
+                           f"`{tail}` inside a loop body — the level loop "
+                           "allows ONE sanctioned sync per level; suppress "
+                           "inline if this is it")
+        # registry bookkeeping (REPRO005)
+        d = _dotted(func)
+        tail = d.split(".")[-1] if d else ""
+        if tail == "register_fn":
+            self.has_register_fn = True
+            for a in node.args + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(a):
+                    if isinstance(sub, ast.Name):
+                        self.registered_names.add(sub.id)
+        elif tail == "register_engine":
+            self.has_register_engine = True
+            for a in node.args + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(a):
+                    if isinstance(sub, ast.Name):
+                        self.registered_names.add(sub.id)
+                    elif isinstance(sub, ast.Attribute):
+                        self.registered_names.add(sub.attr)
+        self.generic_visit(node)
+
+    # -- REPRO005 bookkeeping ---------------------------------------------
+    def visit_Module(self, node: ast.Module) -> None:
+        for stmt in node.body:
+            if isinstance(stmt, ast.FunctionDef):
+                self.module_defs.append(stmt)
+            elif isinstance(stmt, ast.ClassDef):
+                self.module_classes.append(stmt)
+        self.generic_visit(node)
+
+    def finish(self) -> None:
+        """Module-level REPRO005: only meaningful in modules that register
+        at least one candidate (others may define unrelated helpers)."""
+        if self.has_register_fn:
+            for fn in self.module_defs:
+                if (fn.name.startswith(("_build_", "_specs_"))
+                        and fn.name not in self.registered_names):
+                    self._flag(fn, "REPRO005",
+                               f"builder `{fn.name}` defined but never "
+                               "passed to plan.register_fn")
+        if self.has_register_engine:
+            for cls in self.module_classes:
+                if not cls.name.endswith("Engine"):
+                    continue
+                bases = {_dotted(b).split(".")[-1] for b in cls.bases}
+                if "Protocol" in bases:
+                    continue  # interface definition, not a candidate
+                if cls.name not in self.registered_names:
+                    self._flag(cls, "REPRO005",
+                               f"engine class `{cls.name}` defined but "
+                               "never passed to tracking.register_engine")
+
+
+def lint_text(path: str, source: str) -> List[Finding]:
+    """REPRO006/REPRO007 — run on any text file, python or not."""
+    out: List[Finding] = []
+    for i, line in enumerate(source.splitlines(), start=1):
+        if line != line.rstrip(" \t"):
+            out.append(Finding(path, i, "REPRO006", "trailing whitespace"))
+        if "\t" in line:
+            out.append(Finding(path, i, "REPRO007", "tab character"))
+    return out
+
+
+def lint_source(path: str, source: str) -> List[Finding]:
+    """All AST rules + text rules for one python file's contents."""
+    out = lint_text(path, source)
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as err:
+        out.append(Finding(path, err.lineno or 0, "REPRO005",
+                           f"unparseable python: {err.msg}"))
+        return out
+    v = _Visitor(path)
+    v.visit(tree)
+    v.finish()
+    return out + v.findings
+
+
+def lint_file(repo_root: Path, rel_path: str) -> List[Finding]:
+    text = (repo_root / rel_path).read_text()
+    if rel_path.endswith(".py"):
+        return lint_source(rel_path, text)
+    return lint_text(rel_path, text)

@@ -1,0 +1,194 @@
+"""Finding records, inline suppression, and the checked-in baseline.
+
+Shared plumbing for both staticcheck layers (DESIGN.md §13): the AST lint
+rules (`astlint.py`) and the jaxpr/trace checks (`jaxpr_checks.py`) both
+emit :class:`Finding`s; this module decides which of them count.
+
+Suppression model — two mechanisms, used for two different things:
+
+* **Inline suppression** (``# staticcheck: disable=REPRO003 -- reason``)
+  marks an *individually sanctioned* site: the code is intentional, the
+  justification rides next to it, and a reviewer sees both. Same-line, or
+  a standalone comment on the line directly above for statements too long
+  to share a line with their justification.
+
+* **Baseline file** (``baseline.txt`` next to this module) exempts whole
+  *files or trees* of seed scaffolding that the mining stack never calls
+  (models/, optim/, ...). Entries are ``glob :: codes :: reason`` — codes
+  are explicit, so the mechanical hygiene rules (REPRO006/REPRO007) keep
+  running even on baselined files.
+
+Everything else is an unsuppressed finding and exits the runner non-zero.
+"""
+from __future__ import annotations
+
+import fnmatch
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+__all__ = [
+    "Finding", "RULES", "parse_suppressions", "Baseline", "load_baseline",
+    "filter_findings", "format_findings", "BASELINE_PATH",
+]
+
+#: Rule registry: code -> one-line description (printed by ``--list-rules``
+#: and embedded in reports). DESIGN.md §13 documents each at length.
+RULES: Dict[str, str] = {
+    "REPRO001": "falsy-or default on a capacity-like value (0 is valid; "
+                "use `x if x is not None else default`)",
+    "REPRO002": "interpret/tile knob accepted but never threaded to the "
+                "next layer",
+    "REPRO003": "direct jax.jit/pallas_call outside core/plan.py or "
+                "kernels/ (bypasses the AOT executable cache)",
+    "REPRO004": "device_get/block_until_ready inside a loop body (breaks "
+                "the one-sync-per-level contract)",
+    "REPRO005": "registry candidate never registered via plan.register_fn"
+                "/tracking.register_engine",
+    "REPRO006": "trailing whitespace",
+    "REPRO007": "tab character in source",
+    "REPRO101": "forbidden host-transfer/callback primitive in a traced "
+                "plan body",
+    "REPRO102": "plan shape or input spec not capacity-class-rounded",
+    "REPRO103": "t_min seed restriction not applied exactly once per "
+                "dispatch path",
+    "REPRO104": "Pallas tile/grid/VMEM contract violation",
+}
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One violation: ``path:line: code message`` (ruff-style)."""
+
+    path: str       # repo-relative posix path, or plan://... for layer 1
+    line: int       # 1-based; 0 for whole-plan findings
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# Inline suppression comments
+# ---------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*staticcheck:\s*disable=([A-Za-z0-9_,\s]+?)(?:\s*(?:--|—).*)?$")
+
+
+def parse_suppressions(source: str) -> Dict[int, Set[str]]:
+    """Map line number -> suppressed codes for one file's text.
+
+    A suppression on a code-bearing line covers that line; a suppression
+    that IS the whole line (a standalone comment) covers the next
+    non-comment line, so a multi-line justification block above a long
+    statement still reaches the code it sanctions.
+    """
+    lines = source.splitlines()
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(line)
+        if not m:
+            continue
+        codes = {c.strip().upper() for c in m.group(1).split(",") if c.strip()}
+        out.setdefault(i, set()).update(codes)
+        if line.lstrip().startswith("#"):
+            j = i  # 0-based index of the line after the comment
+            while j < len(lines) and lines[j].lstrip().startswith("#"):
+                j += 1
+            out.setdefault(j + 1, set()).update(codes)
+    return out
+
+
+def is_suppressed(finding: Finding,
+                  suppressions: Dict[int, Set[str]]) -> bool:
+    codes = suppressions.get(finding.line, set())
+    return finding.code in codes or "ALL" in codes
+
+
+# ---------------------------------------------------------------------------
+# Baseline (file-level exemptions for seed scaffolding)
+# ---------------------------------------------------------------------------
+
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.txt"
+
+
+@dataclass(frozen=True)
+class BaselineEntry:
+    pattern: str          # fnmatch glob over repo-relative posix paths
+    codes: Tuple[str, ...]  # ("*",) = every code
+    reason: str
+
+    def matches(self, path: str, code: str) -> bool:
+        if "*" not in self.codes and code not in self.codes:
+            return False
+        if self.pattern.endswith("/"):
+            return path.startswith(self.pattern)
+        return path == self.pattern or fnmatch.fnmatch(path, self.pattern)
+
+
+class Baseline:
+    def __init__(self, entries: Sequence[BaselineEntry]):
+        self.entries = list(entries)
+
+    def exempts(self, finding: Finding) -> bool:
+        return any(e.matches(finding.path, finding.code)
+                   for e in self.entries)
+
+
+def load_baseline(path: Path = BASELINE_PATH) -> Baseline:
+    entries: List[BaselineEntry] = []
+    if not path.exists():
+        return Baseline(entries)
+    for raw in path.read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = [p.strip() for p in line.split("::")]
+        if len(parts) != 3:
+            raise ValueError(f"malformed baseline entry: {raw!r} "
+                             "(want 'glob :: codes :: reason')")
+        pattern, codes_s, reason = parts
+        codes = tuple(c.strip().upper() for c in codes_s.split(",")
+                      if c.strip())
+        for c in codes:
+            if c != "*" and c not in RULES:
+                raise ValueError(f"baseline names unknown rule {c!r}")
+        entries.append(BaselineEntry(pattern, codes or ("*",), reason))
+    return Baseline(entries)
+
+
+# ---------------------------------------------------------------------------
+# Filtering + report rendering
+# ---------------------------------------------------------------------------
+
+
+def filter_findings(
+    findings: Iterable[Finding],
+    *,
+    sources: Dict[str, str],
+    baseline: Baseline,
+) -> Tuple[List[Finding], List[Finding]]:
+    """Split into (unsuppressed, suppressed). ``sources`` maps the paths
+    we have text for (lint layer) to their contents; plan:// findings have
+    no text and can only be exempted by the baseline."""
+    supp_by_path = {p: parse_suppressions(s) for p, s in sources.items()}
+    kept: List[Finding] = []
+    muted: List[Finding] = []
+    for f in sorted(set(findings)):
+        if baseline.exempts(f) or is_suppressed(
+                f, supp_by_path.get(f.path, {})):
+            muted.append(f)
+        else:
+            kept.append(f)
+    return kept, muted
+
+
+def format_findings(kept: Sequence[Finding],
+                    muted: Sequence[Finding]) -> str:
+    lines = [f.render() for f in kept]
+    lines.append(f"staticcheck: {len(kept)} finding(s), "
+                 f"{len(muted)} suppressed/baselined")
+    return "\n".join(lines)

@@ -292,7 +292,8 @@ def mine_corpus(
             parts.append((counts_dev[:n_streams, :m],
                           keep_dev[:n_streams, :m],
                           overflow_dev[:n_streams, :m]))
-        fetched = jax.device_get(parts)                  # ONE sync per level
+        # staticcheck: disable=REPRO004 -- THE sanctioned one-sync-per-level
+        fetched = jax.device_get(parts)
         counts_h = np.concatenate([p[0] for p in fetched], axis=1)
         keep_h = np.concatenate([p[1] for p in fetched], axis=1)
         overflow_h = np.concatenate([p[2] for p in fetched], axis=1)

@@ -974,6 +974,8 @@ def count_corpus_tail_grouped(
     return tuple(a[:s, :b] for a in out)
 
 
+# staticcheck: disable=REPRO003 -- sanctioned outer jit: fuses index build +
+# counting in one trace; plan.dispatch inlines its traced body underneath
 @functools.partial(
     jax.jit,
     static_argnames=("n_types", "cap", "engine", "cap_occ", "max_window",

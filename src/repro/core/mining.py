@@ -273,7 +273,8 @@ def _mine_levels(cfg: MinerConfig, level1: LevelArrays,
         thr = (cfg.level_thresholds or {}).get(level, cfg.threshold)
         counts_dev, checks = count_level(sym, lo, hi)
         keep_dev = counts_dev >= jnp.int32(thr)             # pruned on device
-        fetched = jax.device_get(                           # ONE sync per level
+        # staticcheck: disable=REPRO004 -- THE sanctioned one-sync-per-level
+        fetched = jax.device_get(
             (counts_dev[:b], keep_dev[:b])
             + tuple(flags[:b] for _, flags in checks))
         counts_h, keep_h = fetched[0], fetched[1]

@@ -62,9 +62,11 @@ def _tile_spans(
     t_next: jax.Array,   # f32[..., cap] sorted rows, +inf padded
     t_high,              # f32[...] (or scalar) per-row window high
     block_next: int,
-    block_prev: int,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Per next-tile prev-event span ``[lo_idx, hi_idx)`` + occupancy mask.
+
+    Spans are *event* indices — callers quantize to prev tiles themselves,
+    so ``block_prev`` never enters this computation.
 
     A next tile with min ``a0`` / finite max ``a1`` needs prev events in
     ``[a0 - t_high, a1)``; rows are sorted so the tile min is element 0 and
@@ -98,7 +100,7 @@ def required_window_tiles(
     t_next = np.asarray(t_next)
     cap = t_prev.shape[0]
     lo_idx, hi_idx, has = (np.asarray(x) for x in _tile_spans(
-        t_prev, t_next, float(t_high), block_next, block_prev))
+        t_prev, t_next, float(t_high), block_next))
     spans = np.where(has, hi_idx - lo_idx, 0)
     tiles = int(np.max(spans // block_prev + 2, initial=1, where=has))
     return min(max(tiles, 1), cap // block_prev)
@@ -116,7 +118,7 @@ def required_window_tiles_batch(
     cap = times_by_sym.shape[-1]
     lo_idx, hi_idx, has = (np.asarray(x) for x in _tile_spans(
         times_by_sym[:, :-1], times_by_sym[:, 1:], np.asarray(t_high),
-        block_next, block_prev))
+        block_next))
     spans = np.where(has, hi_idx - lo_idx, 0)
     tiles = int(np.max(spans // block_prev + 2, initial=1, where=has))
     return min(max(tiles, 1), cap // block_prev)
@@ -143,7 +145,7 @@ def window_truncated(
     window span more than ``window_tiles`` prev tiles?"""
     cap = t_prev.shape[-1]
     lo_idx, hi_idx, _ = _tile_spans(
-        t_prev, t_next, t_high, block_next, block_prev)
+        t_prev, t_next, t_high, block_next)
     return jnp.any(window_span_exceeds(
         lo_idx, hi_idx, cap, block_prev, window_tiles))
 
@@ -167,8 +169,7 @@ def window_scan_table(
     cap = times_by_sym.shape[-1]
     prev_tiles = cap // block_prev
     lo_idx, hi_idx, has = _tile_spans(
-        times_by_sym[:, :-1], times_by_sym[:, 1:], t_high,
-        block_next, block_prev)
+        times_by_sym[:, :-1], times_by_sym[:, 1:], t_high, block_next)
     start = lo_idx // block_prev
     end = (hi_idx + block_prev - 1) // block_prev
     num = jnp.where(has, jnp.maximum(end - start, 0), 0)
